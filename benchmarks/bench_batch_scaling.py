@@ -1,0 +1,55 @@
+"""Paper Fig 2b: throughput and token-generation time vs batch size; fits
+the batched latency model H[b, l] = k1*b + k2 + (k3*b + k4)*l (Eq 18)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+
+
+def main(quick: bool = False):
+    from repro.configs import get_smoke_config
+    from repro.core.latency_model import fit_batch_latency_model
+    from repro.serving.engine import Engine, EngineConfig
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-3b"), num_layers=2)
+    eng = Engine(cfg, EngineConfig(max_batch=8, max_seq=256, prompt_bucket=16))
+
+    rows = []   # (b, l, seconds)
+    thr = {}
+    with timer() as t_all:
+        for b in (1, 2, 4, 8):
+            for l in (8, 32, 64):
+                prompts = [np.arange(8, dtype=np.int32) + i for i in range(b)]
+                eng.generate(prompts, [l] * b)          # warmup/compile
+                res = eng.generate(prompts, [l] * b)
+                rows.append((b, l, res["batch_seconds"]))
+                thr[(b, l)] = b * l / res["batch_seconds"]
+
+    bs = np.array([r[0] for r in rows], np.float64)
+    ls = np.array([r[1] for r in rows], np.float64)
+    ts = np.array([r[2] for r in rows], np.float64)
+    blat = fit_batch_latency_model(bs, ls, ts)
+    pred = blat.batch_time(bs, ls)
+    rel_err = float(np.abs(pred - ts).mean() / ts.mean())
+
+    # paper's qualitative claim: throughput increases with batch size
+    thr_increasing = bool(thr[(1, 64)] < thr[(2, 64)] < thr[(4, 64)]
+                          < thr[(8, 64)])
+
+    derived = {
+        "k1": blat.k1, "k2": blat.k2, "k3": blat.k3, "k4": blat.k4,
+        "fit_rel_err": rel_err,
+        "throughput_b1_l64": thr[(1, 64)],
+        "throughput_b8_l64": thr[(8, 64)],
+        "throughput_increases_with_b": thr_increasing,
+    }
+    emit("fig2b_batch_scaling", t_all.seconds, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main()

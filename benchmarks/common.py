@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-figure benchmarks. Each bench prints
+``name,us_per_call,derived`` CSV rows (harness contract) plus a human table,
+and returns a dict consumed by EXPERIMENTS.md generation."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
+
+
+def emit(name: str, seconds: float, derived: dict) -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    row = {"name": name, "us_per_call": seconds * 1e6, "derived": derived}
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(row, f, indent=1, default=float)
+    compact = ";".join(f"{k}={_fmt(v)}" for k, v in list(derived.items())[:8])
+    print(f"{name},{seconds*1e6:.1f},{compact}")
+    return row
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

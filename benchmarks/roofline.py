@@ -1,0 +1,121 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) cell
+from the dry-run artifacts in results/dryrun/.
+
+  compute term    = per-chip HLO FLOPs / 197 TFLOP/s (bf16 MXU peak, v5e)
+  memory term     = per-chip HLO bytes / 819 GB/s (HBM BW, v5e)
+  collective term = per-chip wire bytes per ICI axis / (2 links x 50 GB/s)
+                    (2 = bidirectional ring along one torus dimension; the
+                    assignment's coarser bytes/(chips*link_bw) is also shown)
+
+Per-chip FLOPs/bytes come from the trip-count-corrected HLO parser
+(repro.utils.hlo), NOT from compiled.cost_analysis(), which counts scan
+bodies once (see EXPERIMENTS.md SDry-run). MODEL_FLOPS = 6*N_active*D
+(training) or 2*N_active*D (inference).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+LINKS_PER_AXIS = 2           # bidirectional ring along one torus dim
+
+
+def axis_of_stride(stride: int, mesh: str) -> str:
+    if mesh == "multi" and stride >= 256:
+        return "pod"
+    return "data" if stride >= 16 else "model"
+
+
+def analyze_record(rec: dict) -> dict:
+    hc = rec["hlo_cost"]
+    n_dev = rec["num_devices"]
+    flops_dev = hc["flops"]
+    bytes_dev = hc["bytes_accessed"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    by_axis = {}
+    for stride, b in hc["wire_bytes_by_stride"].items():
+        ax = axis_of_stride(int(float(stride)), rec["mesh"])
+        by_axis[ax] = by_axis.get(ax, 0.0) + b
+    coll_s = sum(b / (LINKS_PER_AXIS * LINK_BW) for b in by_axis.values())
+    coll_s_assignment = hc["collective_wire_bytes"] / LINK_BW
+    model_flops_dev = rec["model_flops_total"] / n_dev
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": rec["status"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "collective_s_assignment": coll_s_assignment,
+        "collective_by_axis": by_axis,
+        "dominant": dominant,
+        "step_time_bound_s": bound,
+        "model_flops_total": rec["model_flops_total"],
+        "useful_ratio": model_flops_dev / max(flops_dev, 1e-30),
+        "mfu_bound": (model_flops_dev / PEAK_FLOPS) / max(bound, 1e-30),
+        "temp_gib": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes", 0) / 2 ** 30,
+        "args_gib": rec.get("memory_analysis", {}).get(
+            "argument_size_in_bytes", 0) / 2 ** 30,
+        "tokens_per_step": rec["tokens_per_step"],
+    }
+
+
+def load_all(out_dir: str = "results/dryrun", mesh: str = "single",
+             tag: str = "") -> list:
+    rows = []
+    suffix = f"__{mesh}{('__' + tag) if tag else ''}.json"
+    for f in sorted(glob.glob(os.path.join(out_dir, "*" + suffix))):
+        rec = json.load(open(f))
+        if tag == "" and rec.get("tag"):
+            continue
+        if rec["status"] == "ok":
+            rows.append(analyze_record(rec))
+        elif rec["status"] == "skipped_by_design":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": "skipped"})
+    return rows
+
+
+def render_table(rows: list) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+           f"{'coll(ms)':>9s} {'dominant':>10s} {'useful':>7s} {'MFU-bnd':>8s} "
+           f"{'temp(GiB)':>10s}")
+    lines = [hdr, "-" * len(hdr)]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r["status"] == "skipped":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"{'skipped (full attention @500k)':>60s}")
+            continue
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']*1e3:9.2f} "
+            f"{r['memory_s']*1e3:9.2f} {r['collective_s']*1e3:9.2f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+            f"{r['mfu_bound']:8.3f} {r['temp_gib']:10.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.out, args.mesh, args.tag)
+    print(render_table(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (plus a roofline summary read from the dry-run artifacts).
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    from benchmarks import (
+        bench_latency_model, bench_batch_scaling, bench_order_stats,
+        bench_clipping, bench_batching_policies, bench_fixed_batching,
+        bench_engine_e2e)
+
+    print("name,us_per_call,derived")
+    bench_latency_model.main(quick)       # Table I + Fig 2a
+    bench_batch_scaling.main(quick)       # Fig 2b
+    bench_order_stats.main(quick)         # Fig 3
+    bench_clipping.main(quick)            # Fig 4
+    bench_batching_policies.main(quick)   # Fig 5
+    bench_fixed_batching.main(quick)      # Fig 6
+    bench_engine_e2e.main(quick)          # beyond-paper engine E2E
+
+    # roofline table (deliverable g) from the dry-run artifacts, if present
+    try:
+        from benchmarks.roofline import load_all, render_table
+        rows = load_all("results/dryrun", "single")
+        if rows:
+            print("\n=== Roofline (single pod, baseline cells) ===")
+            print(render_table(rows))
+    except Exception as e:  # pragma: no cover
+        print("roofline table unavailable:", e)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,55 @@
+"""Scenario: the adaptive control plane reacting to a workload shift.
+
+Phase 1: light-tailed outputs (truncated Gaussian) -> controller leaves the
+         batch size unbounded (paper: larger batches only help).
+Phase 2: the workload turns heavy-tailed (lognormal) -> controller clips at
+         the V1-optimal n_max and caps the batch at b* (paper §IV-C),
+         keeping elastic batching on (paper §IV-D).
+
+Run:  PYTHONPATH=src python examples/adaptive_control.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.control import AdaptiveController
+from repro.core.distributions import LogNormalTokens, TruncGaussianTokens
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+
+
+def main():
+    ctrl = AdaptiveController(
+        LatencyModel(a=0.0212, c=1.79),
+        BatchLatencyModel(k1=0.05, k2=0.5, k3=1e-4, k4=0.002),
+        theta=119 / 120, elastic_available=True,
+        window=512, min_samples=64, heavy_tail_scv=0.4)
+    rng = np.random.default_rng(0)
+
+    phases = [
+        ("light-tailed: truncGauss(800, 40)", TruncGaussianTokens(800, 40)),
+        ("heavy-tailed: lognormal(7, 0.7)", LogNormalTokens(7.0, 0.7)),
+    ]
+    t = 0.0
+    for name, dist in phases:
+        for n in dist.sample(rng, 512):
+            t += rng.exponential(40.0)     # lam = 1/40 (paper's Fig 4 rate)
+            ctrl.observe_arrival(t)
+            ctrl.observe_completion(int(n))
+        rec = ctrl.recommendation(force=True)
+        print(f"\n== {name}")
+        print(f"   heavy_tailed={rec.heavy_tailed}  policy={rec.policy}")
+        print(f"   n_max={rec.n_max}  b_max={rec.b_max}")
+        print(f"   scv={rec.details['scv']:.2f}  "
+              f"expected wait={rec.details['expected_wait']:.1f}s")
+
+    print("\nThe controller flips from unbounded batching to clip+cap when "
+          "the tail appears —\nexactly the paper's §IV-C/§III-C prescription, "
+          "computed live from its formulas.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Re-run the HLO cost model over cached .hlo.zst artifacts (no recompile).
+
+Usage: PYTHONPATH=src python scripts/reanalyze.py [results/dryrun]
+"""
+
+import glob
+import json
+import os
+import sys
+
+import zstandard as zstd
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.utils.hlo import analyze_hlo_text, cost_summary  # noqa: E402
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    for hpath in sorted(glob.glob(os.path.join(out_dir, "*.hlo.zst"))):
+        jpath = hpath.replace(".hlo.zst", ".json")
+        if not os.path.exists(jpath):
+            continue
+        rec = json.load(open(jpath))
+        text = zstd.ZstdDecompressor().decompress(
+            open(hpath, "rb").read()).decode()
+        rec["hlo_cost"] = cost_summary(analyze_hlo_text(text))
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"reanalyzed {os.path.basename(jpath)}: "
+              f"flops={rec['hlo_cost']['flops']:.3g} "
+              f"bytes={rec['hlo_cost']['bytes_accessed']:.3g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Optimized-variant sweep: every (arch x shape) single-pod cell re-lowered
+with the beyond-paper optimizations from EXPERIMENTS.md §Perf applied
+globally (tag 'opt'):
+
+  train:   microbatches=4 (per-device μb 4), ZeRO moments over data
+  decode:  scatter cache update, unrolled decode, head-major (bhsd) cache
+  prefill: grouped MoE dispatch (automatic for MoE archs)
+
+Usage: PYTHONPATH=src python scripts/run_optimized_sweep.py
+"""
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+CELL = """
+from repro.launch.dryrun import run_cell
+import json, sys
+arch, shape = sys.argv[1], sys.argv[2]
+overrides = json.loads(sys.argv[3])
+run_cell(arch, shape, "single", "results/dryrun", overrides=overrides, tag="opt")
+"""
+
+
+def main():
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.configs import ARCH_IDS, SHAPE_IDS, SHAPES, get_config, \
+        shape_applicable
+    import json
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPE_IDS:
+            if not shape_applicable(cfg, shape):
+                continue
+            out = os.path.join(ROOT, "results", "dryrun",
+                               f"{arch}__{shape}__single__opt.json")
+            if os.path.exists(out):
+                rec = json.load(open(out))
+                if rec.get("status") == "ok":
+                    print(f"[skip] {arch} {shape}")
+                    continue
+            kind = SHAPES[shape]["kind"]
+            if kind == "train":
+                ov = {"num_microbatches": 4, "zero_moments": True}
+            elif kind == "decode":
+                ov = {"decode_cache_update": "scatter",
+                      "decode_unroll_layers": True,
+                      "cache_layout": "bhsd"}
+            else:
+                ov = {}
+            env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+            r = subprocess.run(
+                [sys.executable, "-c", CELL, arch, shape, json.dumps(ov)],
+                env=env, cwd=ROOT, timeout=3000)
+            if r.returncode != 0:
+                print(f"[FAIL] {arch} {shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full production config;
+``get_smoke_config(arch_id)`` returns the reduced same-family variant used by
+CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "gemma-7b",
+    "yi-9b",
+    "qwen2.5-3b",
+    "internlm2-1.8b",
+    "musicgen-large",
+    "moonshot-v1-16b-a3b",
+    "mixtral-8x7b",
+    "llama-3.2-vision-90b",
+    "jamba-1.5-large-398b",
+    "mamba2-2.7b",
+)
+
+_MODULES = {
+    "gemma-7b": "gemma_7b",
+    "yi-9b": "yi_9b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "musicgen-large": "musicgen_large",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "mamba2-2.7b": "mamba2_2_7b",
+}
+
+SHAPE_IDS = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+# (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def get_config(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.config()
+
+
+def get_smoke_config(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.smoke_config()
+
+
+def shape_applicable(cfg, shape_id: str) -> bool:
+    """long_500k requires sub-quadratic decode-context cost (see DESIGN.md)."""
+    if shape_id == "long_500k":
+        return cfg.subquadratic
+    return True

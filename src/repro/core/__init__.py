@@ -1,0 +1,11 @@
+# The paper's primary contribution: queueing-theoretic analysis and control
+# of LLM inference serving under variable output-token length.
+#
+#   distributions  output-token length distributions (+ clipped moments, order stats)
+#   latency_model  S = a*n + c and H[b,l] = k1*b + k2 + (k3*b + k4)*l calibration
+#   mg1            M/G/1 FCFS queueing delay with max-token clipping   (Eqs 1-5)
+#   impatience     abandonment model: De Kok-Tijms + exact level crossing (6-9)
+#   policy_opt     optimal n_max (V1/V2), optimal fixed batch b*       (10-13, 25)
+#   bulk           dynamic / fixed / elastic batching bulk queues      (14-26)
+#   simulate       event-driven simulators validating every formula    (paper SV)
+#   control        adaptive control plane wiring analytics into the engine

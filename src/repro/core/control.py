@@ -1,0 +1,129 @@
+"""Adaptive control plane: the paper's analytics as a first-class feature.
+
+``AdaptiveController`` watches the live request stream (arrival times,
+completed output-token counts), maintains an empirical output-token
+distribution and arrival-rate estimate, and derives the serving
+configuration from the paper's models:
+
+  * ``n_max``  — optimal max-token limit (V1 or V2, Eqs 10-13)
+  * ``b_max``  — optimal dynamic-batching cap: b* from the M/D^b/1 analysis
+                 when the tail is heavy (paper §IV-C finding), unbounded for
+                 light tails
+  * ``policy`` — 'elastic' when the engine supports early-exit batching
+                 (minimal delay for every distribution, paper §IV-D),
+                 otherwise 'dynamic'
+
+The serving engine polls ``recommendation()`` between batches; hysteresis
+avoids thrashing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.distributions import EmpiricalTokens, TokenDistribution
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policy_opt import optimize_token_limit_v1, optimize_token_limit_v2
+from repro.core.bulk import optimal_fixed_batch, dynamic_batching_bound
+
+
+@dataclasses.dataclass
+class Recommendation:
+    n_max: Optional[int]
+    b_max: Optional[int]
+    policy: str
+    heavy_tailed: bool
+    lam_hat: float
+    details: dict
+
+
+def tail_index(dist: TokenDistribution) -> float:
+    """Heavy-tail heuristic: squared coefficient of variation of N."""
+    m, v = dist.mean(), dist.var()
+    return v / max(m * m, 1e-12)
+
+
+class AdaptiveController:
+    def __init__(self, single_lat: LatencyModel, batch_lat: BatchLatencyModel,
+                 *, theta: float = 0.95, tau: Optional[float] = None,
+                 loss_cost: float = 4.0, elastic_available: bool = True,
+                 window: int = 4096, min_samples: int = 64,
+                 heavy_tail_scv: float = 0.5, b_search: int = 64):
+        self.single_lat = single_lat
+        self.batch_lat = batch_lat
+        self.theta = theta
+        self.tau = tau
+        self.loss_cost = loss_cost
+        self.elastic_available = elastic_available
+        self.min_samples = min_samples
+        self.heavy_tail_scv = heavy_tail_scv
+        self.b_search = b_search
+        self._tokens = deque(maxlen=window)
+        self._arrivals = deque(maxlen=window)
+        self._last: Optional[Recommendation] = None
+
+    # ---------------- stream ingestion ----------------
+    def observe_arrival(self, t: float):
+        self._arrivals.append(t)
+
+    def observe_completion(self, output_tokens: int):
+        self._tokens.append(int(output_tokens))
+
+    def lam_hat(self) -> float:
+        if len(self._arrivals) < 2:
+            return 0.0
+        span = self._arrivals[-1] - self._arrivals[0]
+        return (len(self._arrivals) - 1) / max(span, 1e-9)
+
+    def empirical_dist(self) -> Optional[TokenDistribution]:
+        if len(self._tokens) < self.min_samples:
+            return None
+        return EmpiricalTokens(list(self._tokens))
+
+    # ---------------- recommendation ----------------
+    def recommendation(self, force: bool = False) -> Recommendation:
+        dist = self.empirical_dist()
+        lam = self.lam_hat()
+        if dist is None or lam <= 0:
+            return Recommendation(n_max=None, b_max=None,
+                                  policy="dynamic", heavy_tailed=False,
+                                  lam_hat=lam, details={"reason": "warmup"})
+
+        scv = tail_index(dist)
+        heavy = scv > self.heavy_tail_scv
+
+        # optimal token limit (paper Eqs 10-13)
+        if self.tau is None:
+            ch = optimize_token_limit_v1(dist, self.single_lat, lam, self.theta)
+        else:
+            ch = optimize_token_limit_v2(dist, self.single_lat, lam,
+                                         self.theta, self.tau, self.loss_cost)
+        n_max = ch.n_max
+
+        # batching policy (paper §IV conclusions)
+        clipped = dist.clip(n_max)
+        b_max = None
+        if heavy:
+            fb = optimal_fixed_batch(clipped, self.batch_lat, lam,
+                                     b_max=self.b_search)
+            b_max = fb["b_star"]
+        policy = "elastic" if self.elastic_available else "dynamic"
+
+        rec = Recommendation(
+            n_max=n_max, b_max=b_max, policy=policy, heavy_tailed=heavy,
+            lam_hat=lam,
+            details={"scv": scv, "objective": ch.objective,
+                     "expected_wait": ch.wait, "loss_frac": ch.loss_frac})
+        # hysteresis: ignore <10% n_max moves
+        if (not force and self._last is not None
+                and self._last.n_max and n_max
+                and abs(n_max - self._last.n_max) < 0.1 * self._last.n_max):
+            rec = dataclasses.replace(
+                rec, n_max=self._last.n_max, b_max=self._last.b_max)
+        self._last = rec
+        return rec

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    SyntheticLMDataset,
+    make_request_stream,
+    Request,
+)
+
+__all__ = ["SyntheticLMDataset", "make_request_stream", "Request"]

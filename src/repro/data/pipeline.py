@@ -1,0 +1,107 @@
+"""Data pipeline: synthetic LM token streams for training and Poisson request
+workloads (with the paper's output-token distributions) for serving.
+
+Training batches are generated deterministically from a seed (restart-safe:
+the dataset index is part of the checkpoint ``extra`` metadata, so resuming
+replays from the same position — exactly-once sample semantics without a
+filesystem dataset).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.distributions import TokenDistribution
+from repro.models.config import ModelConfig
+
+
+class SyntheticLMDataset:
+    """Zipf-distributed token sequences with structure (local n-gram
+    correlations) so smoke-training shows a real falling loss."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int, global_batch: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.index = 0
+        v = cfg.vocab_size
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        self._probs = (1.0 / ranks ** 1.1)
+        self._probs /= self._probs.sum()
+
+    def _rng(self, index: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, index))
+
+    def batch(self, index: Optional[int] = None) -> dict:
+        idx = self.index if index is None else index
+        rng = self._rng(idx)
+        b, s, v = self.global_batch, self.seq_len, self.cfg.vocab_size
+        base = rng.choice(v, size=(b, s + 1), p=self._probs)
+        # inject determinism: every token at even position repeats previous
+        # (learnable bigram structure)
+        base[:, 2::2] = (base[:, 1:-1:2] * 7 + 13) % v
+        tokens = base[:, :-1].astype(np.int32)
+        labels = base[:, 1:].astype(np.int32)
+        out = {"labels": labels}
+        if self.cfg.embeddings_input:
+            erng = self._rng(idx + 10 ** 9)
+            out["embeds"] = erng.normal(
+                0, 0.02, (b, s, self.cfg.d_model)).astype(np.float32)
+            out["labels"] = labels % self.cfg.vocab_size
+        else:
+            out["tokens"] = tokens
+        if self.cfg.vision_seq:
+            irng = self._rng(idx + 2 * 10 ** 9)
+            out["image_embeds"] = irng.normal(
+                0, 0.02, (b, self.cfg.vision_seq, self.cfg.d_model)
+            ).astype(np.float32)
+        if index is None:
+            self.index += 1
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.batch()
+
+
+# ----------------------------------------------------------------------------
+# Serving workload
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt_tokens: np.ndarray        # int32 [prompt_len]
+    target_output_tokens: int        # "user requirement" n_req (paper SIII)
+    # filled by the engine:
+    start_time: float = -1.0
+    finish_time: float = -1.0
+    generated: int = 0
+
+    @property
+    def queue_wait(self) -> float:
+        return self.start_time - self.arrival
+
+
+def make_request_stream(num: int, lam: float, dist: TokenDistribution,
+                        vocab: int, prompt_len_range=(8, 64),
+                        seed: int = 0):
+    """Poisson arrivals + iid output-token requirements (the paper's model)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, num))
+    outs = dist.sample(rng, num)
+    reqs = []
+    for i in range(num):
+        plen = int(rng.integers(*prompt_len_range))
+        reqs.append(Request(
+            rid=i, arrival=float(arrivals[i]),
+            prompt_tokens=rng.integers(0, vocab, plen).astype(np.int32),
+            target_output_tokens=int(max(outs[i], 1)),
+        ))
+    return reqs

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    ShardCtx,
+    logical_to_spec,
+    make_named_sharding,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "ShardCtx",
+    "logical_to_spec",
+    "make_named_sharding",
+]

@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (GSPMD via pjit/NamedSharding).
+
+Every parameter/activation dimension in the model zoo carries a *logical*
+axis name.  A rule table maps logical names onto mesh axes; resolution checks
+divisibility against the actual dim size and silently falls back to
+replication when a dim cannot shard (e.g. 4 KV heads on a 16-way model axis).
+
+Rules may map one logical name onto a *tuple* of mesh axes (e.g. ``batch ->
+("pod", "data")``); axes missing from the mesh are dropped, so the same rule
+table serves the single-pod (data, model) and multi-pod (pod, data, model)
+meshes unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis vocabulary used by the model zoo:
+#   batch     request/example dim                      -> DP (pod, data)
+#   seq       sequence dim of activations              -> unsharded by default
+#   kv_seq    KV-cache sequence dim (decode)           -> model (flash-decoding)
+#   embed     d_model dim                              -> unsharded (or data for FSDP)
+#   ffn       FFN hidden dim                           -> TP (model)
+#   heads     query heads                              -> TP (model)
+#   kv_heads  KV heads                                 -> TP (model; replicates if < axis)
+#   head_dim  per-head dim                             -> unsharded
+#   vocab     vocabulary dim                           -> TP (model)
+#   experts   MoE expert dim                           -> EP (model)
+#   conv_dim / ssm_state / ssm_heads / ssm_inner       Mamba dims
+#   layers    stacked layer-group dim                  -> never sharded
+
+AxisRules = dict
+
+
+DEFAULT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",
+    "embed": None,
+    "ffn": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "experts": "model",
+    "expert_ffn": None,
+    "moe_cap": "data",        # MoE dispatch-buffer capacity dim (token-like)
+    "moe_groups": ("pod", "data"),   # GShard dispatch-group dim
+    "conv_dim": "model",
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "vis_seq": None,
+    "layers": None,
+}
+
+# FSDP variant for >=70B configs: weights additionally sharded over `data`
+# on the embed dim, gradients reduce-scattered (ZeRO-3-ish via GSPMD).
+FSDP_RULES: AxisRules = dict(
+    DEFAULT_RULES,
+    embed="data",
+)
+
+# Sequence-parallel variant used for very long prefill: activations shard
+# their seq dim over `model` between attention blocks.
+SEQPAR_RULES: AxisRules = dict(DEFAULT_RULES, seq="model")
+
+
+def _resolve(logical: Optional[str], rules: AxisRules, mesh: Mesh,
+             dim_size: Optional[int]):
+    if logical is None:
+        return None
+    target = rules.get(logical, None)
+    if target is None:
+        return None
+    axes = target if isinstance(target, tuple) else (target,)
+    # drop axes not present in this mesh (e.g. "pod" on the single-pod mesh)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    if dim_size is not None:
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if dim_size % total != 0:
+            return None  # cannot shard evenly -> replicate
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_to_spec(logical_axes, rules: AxisRules, mesh: Mesh,
+                    shape=None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    Guarantees no mesh axis is used twice (first occurrence wins).
+    """
+    used = set()
+    entries = []
+    for i, name in enumerate(logical_axes):
+        dim = None if shape is None else shape[i]
+        r = _resolve(name, rules, mesh, dim)
+        if r is None:
+            entries.append(None)
+            continue
+        axes = r if isinstance(r, tuple) else (r,)
+        if any(a in used for a in axes):
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(r)
+    # trim trailing Nones for cleanliness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def make_named_sharding(mesh: Mesh, logical_axes, rules: AxisRules = None,
+                        shape=None) -> NamedSharding:
+    rules = DEFAULT_RULES if rules is None else rules
+    return NamedSharding(mesh, logical_to_spec(logical_axes, rules, mesh, shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Threaded through model code; applies sharding constraints when a mesh
+    is present, and is a no-op in single-device smoke tests."""
+
+    mesh: Optional[Mesh] = None
+    rules: AxisRules = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def c(self, x, *logical_axes):
+        """Constrain activation ``x`` to the sharding implied by its logical axes."""
+        if self.mesh is None or self.mesh.size == 1:
+            return x
+        assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+        spec = logical_to_spec(logical_axes, self.rules, self.mesh, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, logical_axes, shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return make_named_sharding(self.mesh, logical_axes, self.rules, shape)
+
+
+NULL_CTX = ShardCtx()

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for ragged decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_reference(q, k_cache, v_cache, lengths):
+    """q: [B,Hq,D]; caches: [B,S,Hkv,D]; lengths: [B] -> [B,Hq,D]."""
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    k = jnp.repeat(k_cache, g, axis=2) if g > 1 else k_cache
+    v = jnp.repeat(v_cache, g, axis=2) if g > 1 else v_cache
+    scores = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.rmsnorm.ops import fused_rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_reference
+
+__all__ = ["fused_rmsnorm", "rmsnorm_reference"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for fused residual + RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_reference(x, residual, weight, eps: float = 1e-6):
+    s = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    var = jnp.mean(s * s, axis=-1, keepdims=True)
+    n = s * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return s.astype(x.dtype), n.astype(x.dtype)

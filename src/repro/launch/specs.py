@@ -1,0 +1,185 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+zero allocation) for every (architecture x input shape) dry-run cell, plus
+the step function each shape kind lowers.
+
+Shape semantics (per assignment):
+  train_4k    -> train_step(params, opt_state, batch)
+  prefill_32k -> serve_prefill(params, tokens/embeds [, cross], cache)
+  decode_32k  -> serve_decode(params, cache, tokens[B], kv_lens[B])
+  long_500k   -> serve_decode with a 512k-token KV cache, batch 1
+                 (sub-quadratic archs only; see DESIGN.md)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.distributed.sharding import (
+    DEFAULT_RULES, FSDP_RULES, ShardCtx, make_named_sharding)
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    param_specs, cache_specs, prefill, decode_step)
+from repro.models.params import Spec, abstract_params, is_spec
+from repro.training.optimizer import AdamWConfig, AdamWState
+from repro.training.train_step import (
+    TrainConfig, make_train_step, train_input_specs)
+
+
+def rules_for(cfg: ModelConfig):
+    rules = dict(FSDP_RULES if cfg.use_fsdp else DEFAULT_RULES)
+    rules.update(dict(cfg.sharding_overrides))
+    return rules
+
+
+def _sds(shape, dtype, mesh, axes, rules):
+    sharding = None
+    if mesh is not None:
+        sharding = make_named_sharding(mesh, axes, rules, shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def abstract_opt_state(pspecs, mesh, rules, moment_dtype,
+                       zero_moments: bool = False):
+    """AdamW state stand-ins. With ``zero_moments`` the moments additionally
+    shard their embed dim over the data axis (ZeRO-1: GSPMD inserts the
+    grad reduce-scatter + param all-gather around the update)."""
+    mrules = dict(rules)
+    if zero_moments and mrules.get("embed") is None:
+        mrules["embed"] = "data"
+    m = abstract_params(pspecs, jnp.dtype(moment_dtype), mesh, mrules)
+    v = abstract_params(pspecs, jnp.dtype(moment_dtype), mesh, mrules)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=make_named_sharding(mesh, (), rules)
+                                if mesh is not None else None)
+    return AdamWState(step=step, m=m, v=v)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, mesh, rules,
+                   dtype=jnp.bfloat16):
+    cs = cache_specs(cfg, batch, max_seq)
+    return jax.tree.map(
+        lambda s: _sds(s.shape, dtype, mesh, s.axes, rules),
+        cs, is_leaf=is_spec)
+
+
+@dataclasses.dataclass
+class DryrunCell:
+    """Everything needed to lower one (arch x shape) cell on a mesh."""
+    step_fn: callable
+    args: tuple           # ShapeDtypeStructs
+    donate: tuple
+    kind: str
+    tokens_per_step: int  # for MODEL_FLOPS accounting
+
+
+def moment_dtype_for(cfg: ModelConfig) -> str:
+    # >=100B params: bf16 moments to fit v5e HBM (DESIGN.md §5)
+    return "bfloat16" if cfg.param_count() > 100e9 else "float32"
+
+
+def param_dtype_for(cfg: ModelConfig):
+    return jnp.bfloat16
+
+
+def microbatches_for(cfg: ModelConfig, global_batch: int, mesh) -> int:
+    """Per-device microbatch of ~1 keeps the remat-scan carry bounded."""
+    if mesh is None:
+        return 1
+    batch_shards = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            batch_shards *= mesh.shape[ax]
+    per_dev = max(global_batch // batch_shards, 1)
+    return min(per_dev, global_batch)
+
+
+def build_cell(cfg: ModelConfig, shape_id: str, mesh,
+               overrides: dict = None) -> DryrunCell:
+    shp = SHAPES[shape_id]
+    seq, gb, kind = shp["seq_len"], shp["global_batch"], shp["kind"]
+    rules = rules_for(cfg)
+    zero_moments = False
+    if overrides:
+        if "rules" in overrides:
+            rules.update(overrides.pop("rules"))
+        zero_moments = bool(overrides.pop("zero_moments", False))
+    if kind == "train":
+        mb = microbatches_for(cfg, gb, mesh)
+        cfg = dataclasses.replace(cfg, num_microbatches=mb)
+    if cfg.num_experts and mesh is not None:
+        shards = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                shards *= mesh.shape[ax]
+        cfg = dataclasses.replace(cfg, moe_groups=shards)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    ctx = ShardCtx(mesh=mesh, rules=rules)
+    pspecs = param_specs(cfg)
+    pdt = param_dtype_for(cfg)
+    aparams = abstract_params(pspecs, pdt, mesh, rules)
+
+    if kind == "train":
+        tcfg = TrainConfig(
+            adamw=AdamWConfig(moment_dtype=moment_dtype_for(cfg)),
+            grad_accum_dtype=("bfloat16" if cfg.param_count() > 100e9
+                              else "float32"))
+        step = make_train_step(cfg, tcfg, ctx)
+        batch = {
+            k: _sds(v.shape, v.dtype, mesh,
+                    ("batch",) + (None,) * (len(v.shape) - 1), rules)
+            for k, v in train_input_specs(cfg, gb, seq).items()
+        }
+        opt = abstract_opt_state(pspecs, mesh, rules, tcfg.adamw.moment_dtype,
+                                 zero_moments=zero_moments)
+        return DryrunCell(step_fn=step, args=(aparams, opt, batch),
+                          donate=(0, 1), kind=kind, tokens_per_step=gb * seq)
+
+    if kind == "prefill":
+        cache = abstract_cache(cfg, gb, seq, mesh, rules)
+
+        def serve_prefill(params, cache, inputs):
+            return prefill(cfg, params, cache=cache, ctx=ctx, **inputs)
+
+        inputs = {}
+        if cfg.embeddings_input:
+            inputs["embeds"] = _sds((gb, seq, cfg.d_model), jnp.bfloat16,
+                                    mesh, ("batch", "seq", "embed"), rules)
+        else:
+            inputs["tokens"] = _sds((gb, seq), jnp.int32, mesh,
+                                    ("batch", "seq"), rules)
+        if cfg.vision_seq:
+            inputs["cross_kv"] = _sds((gb, cfg.vision_seq, cfg.d_model),
+                                      jnp.bfloat16, mesh,
+                                      ("batch", "vis_seq", "embed"), rules)
+        return DryrunCell(step_fn=serve_prefill,
+                          args=(aparams, cache, inputs),
+                          donate=(1,), kind=kind, tokens_per_step=gb * seq)
+
+    # decode
+    if cfg.decode_unroll_layers:
+        cs = cache_specs(cfg, gb, seq)
+        cache = {
+            f"g{g}": jax.tree.map(
+                lambda s: _sds(s.shape[1:], jnp.bfloat16, mesh,
+                               s.axes[1:], rules),
+                cs, is_leaf=is_spec)
+            for g in range(cfg.num_groups)
+        }
+    else:
+        cache = abstract_cache(cfg, gb, seq, mesh, rules)
+
+    def serve_decode(params, cache, tokens, kv_lens):
+        return decode_step(cfg, params, cache, tokens, kv_lens, ctx=ctx)
+
+    tokens = _sds((gb,), jnp.int32, mesh, ("batch",), rules)
+    kv_lens = _sds((gb,), jnp.int32, mesh, ("batch",), rules)
+    return DryrunCell(step_fn=serve_decode,
+                      args=(aparams, cache, tokens, kv_lens),
+                      donate=(1,), kind=kind, tokens_per_step=gb)

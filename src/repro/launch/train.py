@@ -1,0 +1,101 @@
+"""Production training launcher with fault tolerance.
+
+Supervisor loop: build mesh -> restore latest checkpoint (resharding if the
+mesh changed) -> step with heartbeat + step-timeout detection -> periodic
+async checkpoints -> on failure, restart from the last complete checkpoint.
+
+CPU-scale usage (smoke model, real training):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 50 --global-batch 8 --seq-len 64 --ckpt-dir /tmp/ckpt
+
+Cluster usage keeps the same driver; the mesh comes from
+``make_production_mesh()`` and each host runs this entrypoint under its own
+process index (jax.distributed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--step-timeout-s", type=float, default=600.0,
+                    help="straggler/failure detection: a step exceeding this "
+                         "aborts the attempt and restarts from checkpoint")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--simulate-failure-at", type=int, default=-1,
+                    help="test hook: raise at this step on the first attempt")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.pipeline import SyntheticLMDataset
+    from repro.models.model import param_specs
+    from repro.models.params import init_params
+    from repro.training.checkpoint import CheckpointManager
+    from repro.training.optimizer import AdamWConfig, adamw_init
+    from repro.training.train_step import TrainConfig, make_train_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=args.lr, warmup_steps=10,
+                                         total_steps=args.steps))
+    mgr = CheckpointManager(args.ckpt_dir, keep_last=3, async_write=True)
+    ds = SyntheticLMDataset(cfg, args.seq_len, args.global_batch, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+
+    attempt = 0
+    while attempt <= args.max_restarts:
+        try:
+            params = init_params(param_specs(cfg), jax.random.PRNGKey(0),
+                                 jnp.float32)
+            opt = adamw_init(params, tcfg.adamw)
+            start_step = 0
+            if mgr.latest_step() is not None:
+                (params, opt), start_step, extra = mgr.restore((params, opt))
+                ds.index = int(extra.get("data_index", start_step))
+                print(f"[train] restored step {start_step} "
+                      f"(data index {ds.index})", flush=True)
+            for step in range(start_step, args.steps):
+                t0 = time.time()
+                if attempt == 0 and step == args.simulate_failure_at:
+                    raise RuntimeError("injected failure (test hook)")
+                batch = {k: jnp.asarray(v) for k, v in ds.batch().items()}
+                params, opt, metrics = step_fn(params, opt, batch)
+                dt = time.time() - t0
+                if dt > args.step_timeout_s:
+                    raise TimeoutError(
+                        f"step {step} took {dt:.1f}s > timeout "
+                        f"(straggler/failure suspected)")
+                if step % 10 == 0 or step == args.steps - 1:
+                    print(f"[train] step {step} loss={float(metrics['loss']):.4f} "
+                          f"gnorm={float(metrics['grad_norm']):.3f} "
+                          f"({dt*1e3:.0f} ms)", flush=True)
+                if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
+                    mgr.save(step + 1, (params, opt),
+                             extra={"data_index": ds.index})
+            mgr.wait()
+            print("[train] done", flush=True)
+            return
+        except (RuntimeError, TimeoutError) as e:
+            attempt += 1
+            print(f"[train] attempt failed ({e}); restart {attempt}/"
+                  f"{args.max_restarts} from latest checkpoint", flush=True)
+    raise SystemExit("[train] exceeded max restarts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Mamba2 (state-space duality) mixer.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060) in pure JAX:
+intra-chunk quadratic attention-like term + inter-chunk linear state
+recurrence carried by ``lax.scan``. Single-step recurrence for decode.
+
+Shapes: x [B,S,D] -> in_proj -> z [B,S,Din], xs [B,S,Din], B/C [B,S,G,N],
+dt [B,S,H]; heads H = Din / P (P = ssm_head_dim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.distributed.sharding import ShardCtx
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+def mamba_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    g, n, h = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * din + 2 * g * n + h
+    return {
+        "in_proj": Spec((d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": Spec((cfg.ssm_conv_dim, cfg.ssm_conv_kernel),
+                       ("conv_dim", None), scale=0.5),
+        "A_log": Spec((h,), ("ssm_heads",), init="ones"),
+        "D": Spec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": Spec((h,), ("ssm_heads",), init="zeros"),
+        "norm_w": Spec((din,), ("ssm_inner",), init="zeros"),
+        "out_proj": Spec((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    din, g, n, h = cfg.ssm_d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xs = proj[..., din:2 * din]
+    Bm = proj[..., 2 * din:2 * din + g * n]
+    Cm = proj[..., 2 * din + g * n:2 * din + 2 * g * n]
+    dt = proj[..., 2 * din + 2 * g * n:]
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d. x: [B,S,C]; w: [C,K]; state: [B,K-1,C]."""
+    k = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # [B,S+K-1,C]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i].astype(x.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return out, new_state
+
+
+def _gated_rmsnorm(y, z, weight, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    out = y32 * lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(y.dtype)
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, cfg: ModelConfig, ctx, init_state=None):
+    """Chunked SSD scan.
+
+    xh: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    Bm/Cm: [B,S,G,N]. Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    b, s, h, p_dim = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(cfg.ssm_chunk, s)
+    orig_s = s
+    if s % q:
+        # pad with dt=0 tokens: zero dA and zero input weight, so they do not
+        # perturb the state; their outputs are sliced away below.
+        pad = q - s % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // q
+    rep = h // g                                             # heads per group
+
+    def chunk(a):
+        return a.reshape((b, nc, q) + a.shape[2:])
+
+    xh_c = chunk(xh)                                          # [B,C,Q,H,P]
+    dt_c = chunk(dt)                                          # [B,C,Q,H]
+    B_c = chunk(Bm)                                           # [B,C,Q,G,N]
+    C_c = chunk(Cm)
+
+    dA = dt_c * A[None, None, None, :]                        # [B,C,Q,H] (<=0)
+    dA = ctx.c(dA, "batch", None, None, "ssm_heads")
+    cums = jnp.cumsum(dA, axis=2)                             # within-chunk cumsum
+    total = cums[:, :, -1, :]                                 # [B,C,H]
+
+    # intra-chunk: att[i,j] = exp(cums_i - cums_j) * (C_i . B_j)  (i >= j)
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]     # [B,C,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: above-diagonal entries are positive and overflow,
+    # which would poison gradients through the where (NaN x 0 = NaN).
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcigm,bcjgm->bcijg", C_c.astype(jnp.float32),
+                    B_c.astype(jnp.float32))                  # [B,C,Q,Q,G]
+    # broadcast groups over their heads without materializing a repeat
+    bq = decay.shape
+    att = (cb[..., :, None] *
+           decay.reshape(bq[0], bq[1], q, q, g, rep) *
+           dt_c[:, :, None, :, None, :].reshape(bq[0], bq[1], 1, q, g, rep)
+           ).reshape(bq[0], bq[1], q, q, h)                   # [B,C,Q,Q,H]
+    att = ctx.c(att, "batch", None, None, None, "ssm_heads")
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att,
+                         xh_c.astype(jnp.float32))
+
+    # chunk states: sum_j exp(total - cums_j) dt_j x_j B_j -> [B,C,H,P,N]
+    decay_to_end = jnp.exp(total[:, :, None, :] - cums)       # [B,C,Q,H]
+    w = (decay_to_end * dt_c).astype(jnp.float32)
+    xw = (w[..., None] * xh_c.astype(jnp.float32)             # [B,C,Q,H,P]
+          ).reshape(b, nc, q, g, rep, p_dim)
+    states = jnp.einsum("bcqgrp,bcqgn->bcgrpn", xw,
+                        B_c.astype(jnp.float32)
+                        ).reshape(b, nc, h, p_dim, n)
+    states = ctx.c(states, "batch", None, "ssm_heads", None, None)
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(total)                              # [B,C,H]
+
+    def step(h_prev, inp):
+        dec, st = inp                                         # [B,H], [B,H,P,N]
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev                                  # emit state *before* chunk
+
+    h0 = (jnp.zeros((b, h, p_dim, n), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+    hT, h_before = lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)                   # [B,C,H,P,N]
+
+    # inter-chunk contribution: C_i . (exp(cums_i) * h_before)
+    hb_g = h_before.reshape(b, nc, g, rep, p_dim, n)
+    y_inter = jnp.einsum("bcqgn,bcgrpn->bcqgrp", C_c.astype(jnp.float32),
+                         hb_g).reshape(b, nc, q, h, p_dim)
+    y_inter = y_inter * jnp.exp(cums)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, h, p_dim)
+    return y[:, :orig_s], hT
+
+
+def mamba_block(p, x, cfg: ModelConfig, ctx: ShardCtx, *, state=None):
+    """Full Mamba2 mixer. state: dict(conv=[B,K-1,C], ssm=[B,H,P,N]) for decode.
+
+    Returns (out [B,S,D], new_state or None).
+    """
+    b, s, d = x.shape
+    h, p_dim = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)          # [B,S,conv_dim]
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    din = cfg.ssm_d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    xs = conv_out[..., :din]
+    Bm = conv_out[..., din:din + gn].reshape(b, s, cfg.ssm_n_groups, cfg.ssm_state)
+    Cm = conv_out[..., din + gn:].reshape(b, s, cfg.ssm_n_groups, cfg.ssm_state)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [H], negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))    # [B,S,H]
+    xh = xs.reshape(b, s, h, p_dim)
+    xh = ctx.c(xh, "batch", "seq", "ssm_heads", None)
+
+    if state is None or s > 1:
+        ssm_init = None if state is None else state["ssm"]
+        y, hT = _ssd_chunked(xh, dt, A, Bm, Cm, cfg, ctx, init_state=ssm_init)
+    else:
+        # single-token recurrence: h = h*exp(dt*A) + dt * x B ; y = C.h
+        h_prev = state["ssm"].astype(jnp.float32)             # [B,H,P,N]
+        dt1 = dt[:, 0]                                        # [B,H]
+        dec = jnp.exp(dt1 * A[None, :])
+        rep = h // cfg.ssm_n_groups
+        B1 = jnp.repeat(Bm[:, 0], rep, axis=1)                # [B,H,N]
+        C1 = jnp.repeat(Cm[:, 0], rep, axis=1)
+        xb = jnp.einsum("bhp,bhn->bhpn", xh[:, 0].astype(jnp.float32),
+                        B1.astype(jnp.float32))
+        hT = h_prev * dec[:, :, None, None] + dt1[:, :, None, None] * xb
+        y = jnp.einsum("bhn,bhpn->bhp", C1.astype(jnp.float32), hT)[:, None]
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    out = ctx.c(out, "batch", "seq", "embed")
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                     "ssm": hT.astype(state["ssm"].dtype)}
+    return out, new_state

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN (token-choice top-k, capacity-bounded dispatch).
+
+TPU-friendly static-shape implementation: tokens are scattered into a
+``[groups, experts, capacity, d_model]`` buffer (position-in-expert via
+cumsum, GShard style), expert FFNs run as one batched einsum over the expert
+dim (expert parallelism over the `model` mesh axis when ``num_experts``
+divides it; otherwise the expert FFN dim shards), and results combine with
+the routing weights. Overflowing tokens are dropped (their residual passes
+through) — standard capacity-factor semantics; ``capacity_factor >= E/k`` is
+exactly dropless because capacity then clamps at the group token count.
+
+``cfg.moe_groups`` (GShard's group dim) makes dispatch *local to a data
+shard*: with groups == batch shards, the scatter/gather never crosses
+devices, eliminating the dispatch collectives entirely (EXPERIMENTS.md
+SPerf, mixtral iteration 2). groups=1 reproduces global dispatch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardCtx
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+def moe_specs(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    specs = {
+        "router": Spec((d, e), ("embed", "experts"), scale=0.1),
+        "w_up": Spec((e, d, f), ("experts", "embed", "expert_ffn")),
+        "w_down": Spec((e, f, d), ("experts", "expert_ffn", "embed")),
+    }
+    if cfg.gated_ffn:
+        specs["w_gate"] = Spec((e, d, f), ("experts", "embed", "expert_ffn"))
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        specs["shared_up"] = Spec((d, fs), ("embed", "ffn"))
+        specs["shared_down"] = Spec((fs, d), ("ffn", "embed"))
+        if cfg.gated_ffn:
+            specs["shared_gate"] = Spec((d, fs), ("embed", "ffn"))
+    return specs
+
+
+def _capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    cap = int(np.ceil(cfg.capacity_factor * group_tokens *
+                      cfg.num_experts_per_tok / cfg.num_experts))
+    cap = max(4, ((cap + 3) // 4) * 4)
+    # a single expert can never receive more than group_tokens assignments
+    # (top-k indices are distinct), so capacity_factor >= E/k is dropless.
+    return min(cap, group_tokens)
+
+
+def _dispatch_group(xg, top_w, top_idx, e: int, cap: int):
+    """xg: [t,d]; top_w/top_idx: [t,k]. Returns (buf [E,cap,d],
+    e_flat [t*k], p_flat [t*k], keep [t,k])."""
+    t, d = xg.shape
+    k = top_idx.shape[1]
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)      # [t,k,E]
+    flat = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=0) - flat                # [t*k,E]
+    pos = (pos_in_e * flat).sum(-1).reshape(t, k)             # [t,k]
+    keep = pos < cap
+    e_flat = jnp.where(keep, top_idx, e).reshape(-1)          # drop -> row e
+    p_flat = jnp.where(keep, pos, 0).reshape(-1)
+    tok_src = jnp.repeat(xg[:, None, :], k, axis=1)           # [t,k,d]
+    buf = jnp.zeros((e + 1, cap, d), xg.dtype).at[
+        e_flat, p_flat].add(tok_src.reshape(t * k, d))[:e]
+    return buf, e_flat, p_flat, keep
+
+
+def moe_block(p, x, cfg: ModelConfig, ctx: ShardCtx, *, return_aux=False):
+    """x: [B,S,D] -> [B,S,D] (+ aux load-balancing loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    g = cfg.moe_groups if t % max(cfg.moe_groups, 1) == 0 else 1
+    tg = t // g
+    cap = _capacity(cfg, tg)
+    act = jax.nn.gelu if cfg.ffn_activation == "gelu" else jax.nn.silu
+
+    xt = x.reshape(t, d)
+    gates = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                       p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(gates, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)                  # [T,k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # group-local dispatch (vmapped over groups; groups map to data shards)
+    xg = xt.reshape(g, tg, d)
+    wg = top_w.reshape(g, tg, k)
+    ig = top_idx.reshape(g, tg, k)
+    xg = ctx.c(xg, "moe_groups", None, "embed")
+    buf, e_flat, p_flat, keep = jax.vmap(
+        lambda xx, ii: _dispatch_group(xx, None, ii, e, cap),
+        in_axes=(0, 0))(xg, ig)                               # buf [G,E,c,d]
+    buf = ctx.c(buf, "moe_groups", "experts", None, "embed")
+
+    up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(x.dtype))
+    if cfg.gated_ffn:
+        gate = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(x.dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = ctx.c(h, "moe_groups", "experts", None, "expert_ffn")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    out_buf = ctx.c(out_buf, "moe_groups", "experts", None, "embed")
+
+    # gather back per group
+    def _combine(ob, ef, pf, kp, ww):
+        gathered = ob[ef.clip(0, e - 1), pf]                  # [t*k,d]
+        gathered = jnp.where(kp.reshape(-1, 1), gathered, 0.0)
+        weighted = gathered * ww.reshape(-1, 1).astype(ob.dtype)
+        return weighted.reshape(tg, k, d).sum(axis=1)
+
+    out = jax.vmap(_combine)(out_buf, e_flat, p_flat, keep, wg)  # [G,tg,d]
+    out = out.reshape(t, d)
+
+    if cfg.num_shared_experts:
+        s_up = xt @ p["shared_up"].astype(x.dtype)
+        if cfg.gated_ffn:
+            s_h = act(xt @ p["shared_gate"].astype(x.dtype)) * s_up
+        else:
+            s_h = act(s_up)
+        out = out + s_h @ p["shared_down"].astype(x.dtype)
+
+    out = out.reshape(b, s, d)
+    out = ctx.c(out, "batch", "seq", "embed")
+
+    if return_aux:
+        # Switch-style load-balance loss: E * sum_e (frac_tokens_e * mean_prob_e)
+        onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)
+        frac = onehot.sum(axis=(0, 1)) / (t * k)
+        mean_p = probs.mean(axis=0)
+        aux = e * jnp.sum(frac * mean_p)
+        return out, aux
+    return out, jnp.float32(0.0)

@@ -1,0 +1,128 @@
+"""Continuous (iteration-level) batching on the real engine — beyond paper.
+
+A fixed pool of decode slots runs one decode step per iteration; whenever a
+slot finishes its request, the next queued request is prefilled in a size-1
+bucket and its cache is SPLICED into the pool cache at that slot. Short
+requests neither wait for batch formation nor pay padding decode — the
+paper's elastic batching taken to per-iteration granularity (Orca/vLLM).
+
+The splice uses the cache spec's logical axes to locate each leaf's batch
+and kv-seq dims, so it works across attention (bshd/bhsd), Mamba state and
+cross-attention leaves uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import cache_specs
+from repro.models.params import Spec
+
+
+def _axes_tree(cfg: ModelConfig, batch: int, max_seq: int):
+    return cache_specs(cfg, batch, max_seq)
+
+
+def splice_cache(cfg: ModelConfig, pool, single, slot: int,
+                 pool_batch: int, pool_seq: int):
+    """Write request-cache `single` (batch bucket 1, seq bucket S') into
+    `pool` at batch index `slot`."""
+    specs = _axes_tree(cfg, pool_batch, pool_seq)
+
+    def one(spec: Spec, big, small):
+        axes = spec.axes
+        b_dim = axes.index("batch")
+        idx = [slice(None)] * big.ndim
+        idx[b_dim] = slot
+        src = jnp.take(small, 0, axis=b_dim)
+        # align any seq-bearing dim (kv_seq / vis_seq) to the small bucket
+        for d, name in enumerate(axes):
+            if name in ("kv_seq", "vis_seq"):
+                dd = d if d < b_dim else d - 1   # src lost the batch dim
+                span = small.shape[d]
+                idx[d] = slice(0, span)
+                src = jax.lax.slice_in_dim(src, 0, span, axis=dd)
+        return big.at[tuple(idx)].set(src.astype(big.dtype))
+
+    return jax.tree.map(one, specs, pool, single,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+@dataclasses.dataclass
+class ContinuousResult:
+    produced: np.ndarray
+    ttft: np.ndarray            # arrival-agnostic: seconds from serve start
+    completion: np.ndarray      # seconds from serve start
+    decode_steps: int
+    wall_seconds: float
+
+
+def serve_continuous(engine, prompts: List[np.ndarray],
+                     target_tokens: List[int], *, slots: int = 4,
+                     n_max: Optional[int] = None) -> ContinuousResult:
+    """Run all requests through a `slots`-wide continuous-batching pool."""
+    cfg = engine.cfg
+    assert cfg.decode_cache_update in ("scatter", "onehot"), \
+        "continuous batching needs per-slot (ragged) cache updates"
+    n = len(prompts)
+    targets = np.asarray(target_tokens)
+    if n_max is not None:
+        targets = np.minimum(targets, n_max)
+
+    pool_seq = engine.ecfg.max_seq
+    pool = engine.new_cache(slots)
+    kv_lens = np.zeros(slots, np.int64)
+    tok = jnp.zeros((slots,), jnp.int32)
+    slot_req = np.full(slots, -1)
+    produced = np.zeros(n, np.int64)
+    ttft = np.full(n, np.nan)
+    completion = np.full(n, np.nan)
+
+    t0 = time.perf_counter()
+    queue = list(range(n))
+    steps = 0
+
+    def admit(slot):
+        rid = queue.pop(0)
+        cache1, lens1, last1, _, _ = engine.prefill_batch([prompts[rid]])
+        nonlocal pool, tok
+        pool = splice_cache(cfg, pool, cache1, slot, slots, pool_seq)
+        kv_lens[slot] = int(lens1[0])
+        tok = tok.at[slot].set(jnp.argmax(last1[0]).astype(jnp.int32))
+        slot_req[slot] = rid
+        produced[rid] = 1
+        ttft[rid] = time.perf_counter() - t0
+        if targets[rid] <= 1:
+            completion[rid] = ttft[rid]
+            slot_req[slot] = -1
+
+    while queue or (slot_req >= 0).any():
+        for s in range(slots):
+            if slot_req[s] < 0 and queue:
+                admit(s)
+        active = slot_req >= 0
+        if not active.any():
+            continue
+        tok, pool, _ = engine.decode_batch(
+            pool, jnp.asarray(kv_lens.astype(np.int32)), tok)
+        steps += 1
+        kv_lens[active] = np.minimum(kv_lens[active] + 1,
+                                     engine.ecfg.max_seq - 1)
+        now = time.perf_counter() - t0
+        for s in np.where(active)[0]:
+            rid = slot_req[s]
+            produced[rid] += 1
+            if produced[rid] >= targets[rid]:
+                completion[rid] = now
+                slot_req[s] = -1
+
+    return ContinuousResult(
+        produced=produced, ttft=ttft, completion=completion,
+        decode_steps=steps, wall_seconds=time.perf_counter() - t0)

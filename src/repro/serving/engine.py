@@ -1,0 +1,208 @@
+"""Batched serving engine (TPU-style static-bucket execution).
+
+XLA wants static shapes, so the engine compiles one executable per
+(batch-bucket, seq-bucket) pair and routes work to the smallest bucket that
+fits — the TPU adaptation of GPU dynamic batching (DESIGN.md §3). Elastic
+batching gets its *real* speedup from bucket compaction: when enough replies
+finish early, the live requests are gathered into the next-smaller batch
+bucket and decoding continues there (the kernel-level analogue is the ragged
+decode kernel in repro.kernels).
+
+The engine serves two roles:
+  * run actual tiny models on CPU (examples, wall-clock calibration of the
+    paper's a, c, k1..k4 constants),
+  * expose per-step timing hooks the schedulers use to drive policy
+    experiments on a virtual clock at paper scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardCtx, NULL_CTX
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    param_specs, init_cache, prefill, decode_step)
+from repro.models.params import init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 16            # largest batch bucket (power of 2)
+    max_seq: int = 512             # KV capacity per slot
+    prompt_bucket: int = 64        # prompts padded to a multiple of this
+    cache_dtype: str = "float32"
+    greedy: bool = True
+    min_bucket: int = 1
+
+
+def _bucket(n: int, lo: int, hi: int) -> int:
+    b = lo
+    while b < n and b < hi:
+        b *= 2
+    return min(b, hi)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
+                 params=None, seed: int = 0, ctx: ShardCtx = NULL_CTX):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.ctx = ctx
+        if params is None:
+            params = init_params(param_specs(cfg), jax.random.PRNGKey(seed),
+                                 jnp.float32)
+        self.params = params
+        self._prefill_fns: Dict[Tuple[int, int], callable] = {}
+        self._decode_fns: Dict[int, callable] = {}
+        self.step_log: List[dict] = []    # (kind, batch, seq, seconds)
+
+    # ------------------------------------------------------------------
+    def _get_prefill(self, b: int, s: int):
+        key = (b, s)
+        if key not in self._prefill_fns:
+            cfg, ctx = self.cfg, self.ctx
+
+            def fn(params, cache, tokens, prompt_lens):
+                return prefill(cfg, params, tokens, cache=cache,
+                               prompt_lens=prompt_lens, ctx=ctx)
+
+            self._prefill_fns[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._prefill_fns[key]
+
+    def _get_decode(self, b: int):
+        if b not in self._decode_fns:
+            cfg, ctx = self.cfg, self.ctx
+
+            def fn(params, cache, tokens, kv_lens):
+                return decode_step(cfg, params, cache, tokens, kv_lens, ctx=ctx)
+
+            self._decode_fns[b] = jax.jit(fn, donate_argnums=(1,))
+        return self._decode_fns[b]
+
+    def new_cache(self, batch_bucket: int):
+        return init_cache(self.cfg, batch_bucket, self.ecfg.max_seq,
+                          jnp.dtype(self.ecfg.cache_dtype))
+
+    # ------------------------------------------------------------------
+    def prefill_batch(self, prompts: List[np.ndarray]):
+        """Pad to buckets, run prefill. Returns (cache, kv_lens, last_logits,
+        batch_bucket, wall_seconds)."""
+        b = _bucket(len(prompts), self.ecfg.min_bucket, self.ecfg.max_batch)
+        max_p = max(len(p) for p in prompts)
+        s = min(_bucket(max_p, self.ecfg.prompt_bucket, self.ecfg.max_seq),
+                self.ecfg.max_seq)
+        tokens = np.zeros((b, s), np.int32)
+        lens = np.zeros((b,), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, :len(p)] = p[:s]
+            lens[i] = min(len(p), s)
+        lens = np.maximum(lens, 1)
+        cache = self.new_cache(b)
+        fn = self._get_prefill(b, s)
+        t0 = time.perf_counter()
+        last, cache = fn(self.params, cache, jnp.asarray(tokens),
+                         jnp.asarray(lens))
+        last = jax.block_until_ready(last)
+        dt = time.perf_counter() - t0
+        self.step_log.append(
+            {"kind": "prefill", "batch": b, "seq": s, "seconds": dt})
+        return cache, jnp.asarray(lens), last, b, dt
+
+    def decode_batch(self, cache, kv_lens, tokens):
+        """One decode step for the whole bucket. Returns (next_tokens, cache,
+        wall_seconds)."""
+        b = int(tokens.shape[0])
+        fn = self._get_decode(b)
+        t0 = time.perf_counter()
+        logits, cache = fn(self.params, cache, tokens, kv_lens)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.step_log.append(
+            {"kind": "decode", "batch": b, "seq": int(jnp.max(kv_lens)),
+             "seconds": dt})
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache, dt
+
+    def compact(self, cache, kv_lens, tokens, keep_idx: np.ndarray):
+        """Gather live slots into a smaller bucket (elastic batching's real
+        speedup on TPU)."""
+        nb = _bucket(len(keep_idx), self.ecfg.min_bucket, self.ecfg.max_batch)
+        idx = np.zeros((nb,), np.int32)
+        idx[:len(keep_idx)] = keep_idx
+        gidx = jnp.asarray(idx)
+        cache = jax.tree.map(
+            lambda leaf: leaf[:, gidx] if leaf.ndim >= 2 else leaf, cache)
+        return (cache, kv_lens[gidx], tokens[gidx], nb,
+                int(len(keep_idx)))
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: List[np.ndarray], target_tokens: List[int],
+                 elastic: bool = False, n_max: Optional[int] = None):
+        """Run one batch to completion.
+
+        Padded ('dynamic') mode decodes everyone for max(target) steps (the
+        paper's padding semantics). Elastic mode lets finished replies exit
+        and compacts buckets. Returns dict with per-request completion times
+        (seconds of engine wall time after batch start) and token counts.
+        """
+        targets = np.asarray(target_tokens)
+        if n_max is not None:
+            targets = np.minimum(targets, n_max)
+        nreq = len(prompts)
+        cache, kv_lens, last, b, t_prefill = self.prefill_batch(prompts)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        live = np.arange(nreq)
+        produced = np.ones(nreq, np.int64)    # first token from prefill
+        done_at = np.full(nreq, np.nan)
+        clock = t_prefill
+        done_at[targets <= 1] = clock
+        l_max = int(targets.max())
+        for _ in range(1, l_max):
+            if elastic:
+                still = live[targets[live] > produced[live]]
+                if len(still) == 0:
+                    break
+                if len(still) <= b // 2 and b > self.ecfg.min_bucket:
+                    # map global ids to current slot ids
+                    slot_of = {g: i for i, g in enumerate(live)}
+                    keep = np.array([slot_of[g] for g in still], np.int32)
+                    cache, kv_lens, tok, b, _ = self.compact(
+                        cache, kv_lens, tok, keep)
+                    live = still
+            else:
+                if np.all(produced >= targets):
+                    break
+            tok, cache, dt = self.decode_batch(cache, kv_lens, tok)
+            kv_lens = jnp.minimum(kv_lens + 1, self.ecfg.max_seq - 1)
+            clock += dt
+            active = live[produced[live] < targets[live]]
+            produced[active] += 1
+            newly = active[produced[active] == targets[active]]
+            done_at[newly] = clock
+        done_at[np.isnan(done_at)] = clock
+        if not elastic:
+            # padded semantics (paper Eq 18): the whole batch is returned
+            # when its longest member completes
+            done_at[:] = clock
+        return {
+            "completion_seconds": done_at,
+            "batch_seconds": clock,
+            "produced": produced,
+            "prefill_seconds": t_prefill,
+        }
+
+    # ------------------------------------------------------------------
+    def calibration_log(self) -> dict:
+        """Measurements for fitting the paper's latency constants."""
+        pre = [(e["batch"], e["seq"], e["seconds"])
+               for e in self.step_log if e["kind"] == "prefill"]
+        dec = [(e["batch"], e["seconds"])
+               for e in self.step_log if e["kind"] == "decode"]
+        return {"prefill": pre, "decode": dec}

@@ -1,0 +1,28 @@
+"""Serving metrics: the paper's evaluation axis is latency (queueing delay,
+loss fraction); we add standard serving percentiles."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def summarize(result, warmup_frac: float = 0.1) -> dict:
+    k = int(len(result.waits) * warmup_frac)
+    waits = result.waits[k:]
+    lost = result.lost[k:]
+    e2e = result.e2e[k:]
+    served = ~lost
+    out = {
+        "mean_wait": float(waits.mean()) if waits.size else 0.0,
+        "p50_wait": float(np.percentile(waits, 50)) if waits.size else 0.0,
+        "p95_wait": float(np.percentile(waits, 95)) if waits.size else 0.0,
+        "p99_wait": float(np.percentile(waits, 99)) if waits.size else 0.0,
+        "loss_frac": float(lost.mean()) if lost.size else 0.0,
+        "mean_wait_served": float(waits[served].mean()) if served.any() else 0.0,
+        "mean_e2e": float(e2e[served].mean()) if served.any() else 0.0,
+        "mean_batch": (float(np.mean(result.batch_sizes))
+                       if result.batch_sizes else 0.0),
+        "requests": int(len(waits)),
+        "makespan": float(result.makespan),
+    }
+    return out

@@ -1,0 +1,269 @@
+"""Batch schedulers implementing the paper's serving disciplines.
+
+All schedulers consume a list of ``Request``s (Poisson arrivals, iid output
+token requirements) and drive a *virtual timeline*: the next batch starts at
+max(server_free, trigger), exactly like the event-driven simulator — but the
+batch duration comes from a ``ServiceClock``, which is either
+
+  * ``ModelClock``   — the calibrated BatchLatencyModel (paper-scale
+                       experiments in milliseconds of host time), or
+  * ``EngineClock``  — the real jitted engine on a tiny model (wall-clock
+                       ground truth; validates that the policy ordering the
+                       analytics predict holds on real executables).
+
+Policies:
+  FCFSScheduler            M/G/1 single-request service    (paper §III)
+  DynamicBatchScheduler    batch all waiting (cap b_max)   (paper §IV-A/B)
+  FixedBatchScheduler      wait for exactly b              (paper §IV-C)
+  ElasticBatchScheduler    early-exit batches (Eq 26)      (paper §IV-D)
+  ContinuousBatchScheduler iteration-level refill [beyond paper; Orca-style]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.data.pipeline import Request
+
+
+# ----------------------------------------------------------------------------
+# Clocks
+# ----------------------------------------------------------------------------
+
+class ModelClock:
+    def __init__(self, single: LatencyModel, batch: BatchLatencyModel):
+        self.single = single
+        self.batch = batch
+
+    def single_time(self, n_tokens: int) -> float:
+        return float(self.single.service_time(n_tokens))
+
+    def batch_time(self, ns) -> float:
+        ns = np.asarray(ns, np.float64)
+        return float(self.batch.batch_time(len(ns), ns.max()))
+
+    def elastic_times(self, ns) -> np.ndarray:
+        """Per-request completion offsets, ordered like sorted(ns)."""
+        return self.batch.elastic_completion_times(ns)
+
+    def decode_step_time(self, b: int) -> float:
+        return float(self.batch.k3 * b + self.batch.k4)
+
+    def prefill_time(self, b: int) -> float:
+        return float(self.batch.k1 * b + self.batch.k2)
+
+
+class EngineClock:
+    """Wall-clock service times from the real engine."""
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def run_batch(self, reqs: List[Request], elastic: bool,
+                  n_max: Optional[int]):
+        res = self.engine.generate(
+            [r.prompt_tokens for r in reqs],
+            [r.target_output_tokens for r in reqs],
+            elastic=elastic, n_max=n_max)
+        return res["completion_seconds"], res["batch_seconds"]
+
+    def single_time(self, req: Request, n_max):
+        comp, total = self.run_batch([req], False, n_max)
+        return total
+
+
+# ----------------------------------------------------------------------------
+# Schedulers (virtual timeline)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScheduleResult:
+    waits: np.ndarray           # queueing delay per request (paper's E[W])
+    e2e: np.ndarray             # arrival -> reply complete
+    lost: np.ndarray            # impatience abandonments (bool)
+    batch_sizes: List[int]
+    makespan: float
+
+
+def _clip(reqs, n_max):
+    return [min(r.target_output_tokens, n_max) if n_max else
+            r.target_output_tokens for r in reqs]
+
+
+class _Base:
+    def __init__(self, clock: ModelClock, n_max: Optional[int] = None,
+                 tau: Optional[float] = None):
+        self.clock = clock
+        self.n_max = n_max
+        self.tau = tau
+
+
+class FCFSScheduler(_Base):
+    """Single-request FCFS: the paper's M/G/1 (§III), incl. impatience."""
+
+    def run(self, reqs: List[Request]) -> ScheduleResult:
+        n = len(reqs)
+        waits = np.zeros(n)
+        e2e = np.zeros(n)
+        lost = np.zeros(n, bool)
+        t_free = 0.0
+        for i, r in enumerate(reqs):
+            ns = _clip([r], self.n_max)[0]
+            wait = max(0.0, t_free - r.arrival)
+            if self.tau is not None and wait >= self.tau:
+                waits[i] = self.tau
+                lost[i] = True
+                continue
+            svc = self.clock.single_time(ns)
+            waits[i] = wait
+            e2e[i] = wait + svc
+            t_free = r.arrival + wait + svc
+        return ScheduleResult(waits, e2e, lost, [1] * n, t_free)
+
+
+class DynamicBatchScheduler(_Base):
+    """Batch everything waiting when the server frees (cap b_max); padded
+    decode: the batch runs to its longest member (paper Eq 18)."""
+
+    def __init__(self, clock, n_max=None, b_max: Optional[int] = None):
+        super().__init__(clock, n_max)
+        self.b_max = b_max
+
+    def run(self, reqs: List[Request]) -> ScheduleResult:
+        n = len(reqs)
+        arr = np.array([r.arrival for r in reqs])
+        ns = np.array(_clip(reqs, self.n_max), np.float64)
+        waits = np.zeros(n)
+        e2e = np.zeros(n)
+        sizes = []
+        head, t_free = 0, 0.0
+        while head < n:
+            if arr[head] >= t_free:
+                start, hi = arr[head], head + 1
+            else:
+                start = t_free
+                hi = int(np.searchsorted(arr, t_free, side="right"))
+            if self.b_max:
+                hi = min(hi, head + self.b_max)
+            h = self.clock.batch_time(ns[head:hi])
+            waits[head:hi] = start - arr[head:hi]
+            e2e[head:hi] = start + h - arr[head:hi]
+            sizes.append(hi - head)
+            t_free = start + h
+            head = hi
+        return ScheduleResult(waits, e2e, np.zeros(n, bool), sizes, t_free)
+
+
+class FixedBatchScheduler(_Base):
+    """Wait until exactly b requests are present (paper §IV-C)."""
+
+    def __init__(self, clock, b: int, n_max=None):
+        super().__init__(clock, n_max)
+        self.b = b
+
+    def run(self, reqs: List[Request]) -> ScheduleResult:
+        b = self.b
+        n = (len(reqs) // b) * b
+        arr = np.array([r.arrival for r in reqs[:n]])
+        ns = np.array(_clip(reqs[:n], self.n_max), np.float64)
+        waits = np.zeros(n)
+        e2e = np.zeros(n)
+        t_free = 0.0
+        for head in range(0, n, b):
+            batch_arr = arr[head:head + b]
+            start = max(t_free, batch_arr[-1])
+            h = self.clock.batch_time(ns[head:head + b])
+            waits[head:head + b] = start - batch_arr
+            e2e[head:head + b] = start + h - batch_arr
+            t_free = start + h
+        return ScheduleResult(waits, e2e, np.zeros(n, bool),
+                              [b] * (n // b), t_free)
+
+
+class ElasticBatchScheduler(_Base):
+    """Paper §IV-D: batch like dynamic batching, but short replies exit
+    early (per-request completion via Eq 26) and the batch ends at the
+    slowest member's completion."""
+
+    def __init__(self, clock, n_max=None, b_max: Optional[int] = None):
+        super().__init__(clock, n_max)
+        self.b_max = b_max
+
+    def run(self, reqs: List[Request]) -> ScheduleResult:
+        n = len(reqs)
+        arr = np.array([r.arrival for r in reqs])
+        ns = np.array(_clip(reqs, self.n_max), np.float64)
+        waits = np.zeros(n)
+        e2e = np.zeros(n)
+        sizes = []
+        head, t_free = 0, 0.0
+        while head < n:
+            if arr[head] >= t_free:
+                start, hi = arr[head], head + 1
+            else:
+                start = t_free
+                hi = int(np.searchsorted(arr, t_free, side="right"))
+            if self.b_max:
+                hi = min(hi, head + self.b_max)
+            batch_ns = ns[head:hi]
+            comp = self.clock.elastic_times(batch_ns)      # sorted order
+            order = np.argsort(batch_ns, kind="stable")
+            comp_by_req = np.empty(hi - head)
+            comp_by_req[order] = comp
+            waits[head:hi] = start - arr[head:hi]
+            e2e[head:hi] = start + comp_by_req - arr[head:hi]
+            sizes.append(hi - head)
+            t_free = start + comp.max()
+            head = hi
+        return ScheduleResult(waits, e2e, np.zeros(n, bool), sizes, t_free)
+
+
+class ContinuousBatchScheduler(_Base):
+    """Beyond paper: iteration-level scheduling (Orca/vLLM). ``slots``
+    decode streams run concurrently; a finished slot is refilled immediately
+    from the queue (one prefill joins the running batch). Queue wait ends
+    when the request's prefill starts."""
+
+    def __init__(self, clock: ModelClock, slots: int, n_max=None):
+        super().__init__(clock, n_max)
+        self.slots = slots
+
+    def run(self, reqs: List[Request]) -> ScheduleResult:
+        n = len(reqs)
+        arr = np.array([r.arrival for r in reqs])
+        ns = np.array(_clip(reqs, self.n_max), np.int64)
+        waits = np.zeros(n)
+        e2e = np.zeros(n)
+        remaining = {}                 # slot -> [rid, tokens_left]
+        t = 0.0
+        head = 0
+        while head < n or remaining:
+            # admit
+            while head < n and arr[head] <= t and len(remaining) < self.slots:
+                waits[head] = t - arr[head]
+                t += self.clock.prefill_time(1)   # prefill piggybacked
+                remaining[head] = ns[head]
+                head += 1
+            if not remaining:
+                t = max(t, arr[head])
+                continue
+            # one decode iteration for all active slots
+            b = len(remaining)
+            t += self.clock.decode_step_time(b)
+            done = []
+            for rid in list(remaining):
+                remaining[rid] -= 1
+                if remaining[rid] <= 0:
+                    e2e[rid] = t - arr[rid]
+                    done.append(rid)
+            for rid in done:
+                del remaining[rid]
+        return ScheduleResult(waits, e2e, np.zeros(n, bool), [], t)
+
+
+def run_schedule(scheduler, reqs: List[Request]) -> ScheduleResult:
+    return scheduler.run(reqs)

@@ -1,0 +1,7 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.train_step import make_train_step, train_input_specs
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update",
+    "make_train_step", "train_input_specs",
+]

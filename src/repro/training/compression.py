@@ -1,0 +1,76 @@
+"""Gradient compression for cross-data-axis reduction (distributed trick).
+
+int8 symmetric quantization with per-block scales and error feedback:
+gradients are quantized *before* the data-parallel all-reduce (halving or
+quartering DP wire bytes vs bf16/fp32), dequantized after, and the
+quantization residual is carried into the next step (error feedback keeps
+SGD/Adam convergence unbiased to first order).
+
+Under GSPMD we express this as quantize -> psum-style mean across the data
+axis -> dequantize inside the jitted step; XLA moves the small int8 tensors
+across the wire instead of fp32. Exposed via ``TrainConfig.compress_grads``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def _pad_to_block(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def quantize_int8(x) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8. Returns (q [N,BLOCK] int8, scale [N] f32)."""
+    blocks, _ = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, shape, dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads, errors=None):
+    """Quantize every leaf (adding carried error feedback first).
+
+    Returns (qs, scales, new_errors): three pytrees congruent with grads."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    if errors is None:
+        flat_e = [jnp.zeros_like(g, jnp.float32) for g in flat_g]
+    else:
+        flat_e = jax.tree.leaves(errors)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s, g.shape)
+        qs.append(q)
+        scales.append(s)
+        errs.append(g32 - deq)
+    unf = treedef.unflatten
+    return unf(qs), unf(scales), unf(errs)
+
+
+def decompress_tree(qs, scales, shapes_like):
+    flat_q = jax.tree.leaves(qs)
+    flat_s = jax.tree.leaves(scales)
+    flat_ref, treedef = jax.tree.flatten(shapes_like)
+    out = [dequantize_int8(q, s, r.shape, jnp.float32)
+           for q, s, r in zip(flat_q, flat_s, flat_ref)]
+    return treedef.unflatten(out)

@@ -1,0 +1,111 @@
+"""Training step: loss, grad accumulation (microbatch scan), AdamW update.
+
+The step is a pure function lowered by pjit; batch shards over (pod, data),
+parameters/optimizer state follow the model's logical-axis shardings (FSDP
+rules shard the embed dim + moments over data for the >=70B configs).
+Compute/comm overlap comes from the microbatch ``lax.scan``: XLA's
+latency-hiding scheduler overlaps each microbatch's reduce-scatter with the
+next microbatch's compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ShardCtx, NULL_CTX
+from repro.models.config import ModelConfig
+from repro.models.model import forward
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    aux_loss_coef: float = 0.01
+    z_loss_coef: float = 1e-4
+    grad_accum_dtype: str = "float32"   # bf16 for the >=300B configs
+    label_pad_id: int = -1
+
+
+def cross_entropy(logits, labels, pad_id: int = -1):
+    """Masked token-mean CE + z-loss term (fp32)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != pad_id)
+    safe_labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    return ce.sum() / denom, (logz ** 2 * mask).sum() / denom
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx = NULL_CTX):
+    def loss_fn(params, batch):
+        logits, aux = forward(
+            cfg, params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            cross_kv=batch.get("image_embeds"),
+            ctx=ctx)
+        ce, z2 = cross_entropy(logits, batch["labels"], tcfg.label_pad_id)
+        loss = ce + tcfg.z_loss_coef * z2 + tcfg.aux_loss_coef * aux
+        return loss, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    ctx: ShardCtx = NULL_CTX):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    loss_fn = make_loss_fn(cfg, tcfg, ctx)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+    m = cfg.num_microbatches
+
+    def train_step(params, opt_state, batch):
+        if m > 1:
+            def micro(carry, mb):
+                acc = carry
+                g, aux = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), acc, g)
+                return acc, aux
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(tcfg.grad_accum_dtype)),
+                params)
+            grads, auxes = lax.scan(micro, acc0, mb_batch)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            metrics_in = jax.tree.map(lambda x: x.mean(), auxes)
+        else:
+            grads, metrics_in = grad_fn(params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg.adamw)
+        metrics = dict(metrics_in)
+        metrics.update(opt_metrics)
+        metrics["loss"] = metrics_in["ce"]
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_input_specs(cfg: ModelConfig, global_batch: int, seq_len: int):
+    """Shapes (not arrays) of one training batch for lowering/dry-run."""
+    specs = {
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+    if cfg.embeddings_input:
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, seq_len, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (global_batch, seq_len), jnp.int32)
+    if cfg.vision_seq:
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.vision_seq, cfg.d_model), jnp.bfloat16)
+    return specs

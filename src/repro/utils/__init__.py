@@ -1,0 +1,15 @@
+"""Shared utilities: pytree helpers, HLO cost parsing, roofline math."""
+
+from repro.utils.tree import (
+    tree_map_with_path,
+    tree_size_bytes,
+    tree_num_params,
+    tree_allclose,
+)
+
+__all__ = [
+    "tree_map_with_path",
+    "tree_size_bytes",
+    "tree_num_params",
+    "tree_allclose",
+]

@@ -1,0 +1,646 @@
+"""Trip-count-corrected HLO cost model.
+
+``compiled.cost_analysis()`` counts the body of a ``while`` loop (the lowering
+of ``lax.scan``) exactly ONCE, regardless of trip count (verified empirically
+on jax 0.8.2).  Our models scan over layer groups to keep HLO compact — so the
+framework carries its own HLO text parser that:
+
+  * parses every computation and instruction (result shapes, opcode, operands,
+    called computations),
+  * recovers loop trip counts from ``backend_config={"known_trip_count":...}``,
+  * walks the call graph from ENTRY multiplying per-iteration costs by trip
+    counts (recursively, so nested scans — e.g. a KV-block scan inside the
+    layer scan — are handled),
+  * accounts FLOPs (dot/convolution exactly from shapes; elementwise ~1/elem),
+    HBM bytes (operands + results per fusion/op, the same optimistic model
+    XLA's own cost analysis uses), and collective *wire* bytes per mesh axis
+    using ring-algorithm factors.
+
+It is cross-validated in ``tests/test_hlo_cost.py`` against
+``cost_analysis()`` on fully unrolled graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+# ----------------------------------------------------------------------------
+# Shape parsing
+# ----------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e3m4": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: tuple
+
+    @property
+    def elements(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return int(self.elements * _DTYPE_BYTES.get(self.dtype, 4))
+
+
+def parse_shapes(text: str) -> list:
+    """Parse all array shapes out of a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dim_t = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append(Shape(dtype, dim_t))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Instruction / computation parsing
+# ----------------------------------------------------------------------------
+
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*"
+    r"(?P<type>\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<opcode>[\w\-]+)\((?P<args>.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*\((?P<params>.*?)\)\s*->")
+_CALLS_BRACE_RE = re.compile(r"(?:calls|branch_computations)=\{([^}]*)\}")
+_CALLS_SINGLE_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[0-9,\{\}\s]*\})\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "all-to-all-start", "ragged-all-to-all",
+    "collective-broadcast",
+}
+
+# pure data-movement / metadata ops: no flops, no HBM bytes charged
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "get-dimension-size",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+    "all-to-all-done", "async-done", "opt-barrier", "domain", "token",
+    "send", "send-done", "recv", "recv-done", "custom-call",
+}
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "exponential", "log",
+    "rsqrt", "sqrt", "tanh", "logistic", "sine", "cosine", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "compare", "select",
+    "clamp", "exponential-minus-one", "log-plus-one", "atan2",
+    "remainder", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "erf", "cbrt",
+}
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    shapes: list           # result shapes
+    operands: list         # operand instruction names
+    called: list           # called computation names
+    trip_count: Optional[int]
+    attrs: str             # raw attribute text (for dims, groups)
+    raw_operands: str = "" # verbatim text inside the op's parens
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: dict
+    is_entry: bool = False
+
+
+def parse_hlo_module(text: str) -> dict:
+    """Parse HLO text into {computation_name: Computation}."""
+    comps: dict = {}
+    cur: Optional[Computation] = None
+    for raw_line in text.splitlines():
+        line = raw_line.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group("name"), {}, bool(m.group(1)))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group("opcode")
+        # args run to end of line; split into operand part and attrs
+        args = m.group("args")
+        depth, idx = 1, 0
+        for idx, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_text, attr_text = args[: idx], args[idx + 1:]
+        called = []
+        cm = _CALLS_BRACE_RE.search(attr_text)
+        if cm:
+            called = [c.strip().lstrip("%") for c in cm.group(1).split(",") if c.strip()]
+        else:
+            cm = _CALLS_SINGLE_RE.search(attr_text)
+            if cm:
+                called = [cm.group(1)]
+        # while: body=..., condition=... appear as separate attrs
+        if opcode == "while":
+            called = []
+            for key in ("condition", "body"):
+                km = re.search(key + r"=%?([\w\.\-]+)", attr_text)
+                if km:
+                    called.append(km.group(1))
+        tm = _TRIP_RE.search(attr_text)
+        trip = int(tm.group(1)) if tm else None
+        operands = _OPERAND_RE.findall(operand_text)
+        instr = Instruction(
+            name=m.group("name"),
+            opcode=opcode,
+            shapes=parse_shapes(m.group("type")),
+            operands=operands,
+            called=called,
+            trip_count=trip,
+            attrs=attr_text,
+            raw_operands=operand_text,
+        )
+        cur.instructions[instr.name] = instr
+    return comps
+
+
+# ----------------------------------------------------------------------------
+# Cost accounting
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CollectiveStat:
+    opcode: str
+    bytes_moved: float        # wire bytes per chip (ring model)
+    payload_bytes: float      # raw operand/result payload bytes
+    group_size: int
+    stride: int               # stride between consecutive members (mesh axis id)
+    count: float = 1.0
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(c.bytes_moved * c.count for c in self.collectives)
+
+    @property
+    def collective_payload_bytes(self) -> float:
+        return sum(c.payload_bytes * c.count for c in self.collectives)
+
+    def wire_bytes_by_stride(self) -> dict:
+        out: dict = {}
+        for c in self.collectives:
+            out[c.stride] = out.get(c.stride, 0.0) + c.bytes_moved * c.count
+        return out
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        for c in other.collectives:
+            self.collectives.append(
+                dataclasses.replace(c, count=c.count * mult)
+            )
+
+
+def _feeds(comp: "Computation", src_name: str, dst_name: str,
+           transparent=("convert", "bitcast", "copy"), depth: int = 8) -> bool:
+    """True if dst is src or reachable from src through transparent ops."""
+    frontier = {src_name}
+    for _ in range(depth):
+        if dst_name in frontier:
+            return True
+        nxt = set()
+        for ins in comp.instructions.values():
+            if ins.opcode in transparent and ins.operands \
+                    and ins.operands[0] in frontier:
+                nxt.add(ins.name)
+        if not nxt:
+            break
+        frontier = nxt
+    return dst_name in frontier
+
+
+def _parse_dims(attrs: str, key: str) -> list:
+    m = re.search(key + r"=\{([0-9,]*)\}", attrs)
+    if not m or not m.group(1):
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _parse_replica_groups(attrs: str, opcode: str):
+    """Return (group_size, stride). stride identifies the mesh axis."""
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        n_groups, g = int(m.group(1)), int(m.group(2))
+        # iota format: [G,S]<=[dims...] — membership stride depends on the
+        # transpose; for [G,S]<=[N] plain, members are contiguous (stride 1).
+        dims = [int(x) for x in m.group(3).split(",")]
+        stride = 1
+        tm = re.search(r"<=\[[0-9,]+\]T\(([0-9,]+)\)", attrs)
+        if tm and len(dims) > 1:
+            perm = [int(x) for x in tm.group(1).split(",")]
+            # members of a group vary over the *last* logical dim; its stride
+            # in device space is the product of dims after it in device order.
+            last = perm.index(len(dims) - 1) if (len(dims) - 1) in perm else len(dims) - 1
+            stride = 1
+            for d in dims[last + 1:]:
+                stride *= d
+        return g, stride
+    m = _GROUPS_LIST_RE.search(attrs)
+    if m:
+        first = m.group(1).split("}")[0].lstrip("{")
+        members = [int(x) for x in first.split(",") if x.strip()]
+        if len(members) >= 2:
+            return len(members), members[1] - members[0]
+        return max(len(members), 1), 1
+    return 1, 1
+
+
+def _collective_cost(instr: Instruction) -> Optional[CollectiveStat]:
+    op = instr.opcode.replace("-start", "")
+    if op not in _COLLECTIVES:
+        return None
+    g, stride = _parse_replica_groups(instr.attrs, op)
+    shapes = instr.shapes
+    if not shapes:
+        return None
+    total = sum(s.bytes for s in shapes)
+    if instr.opcode.endswith("-start") and len(shapes) >= 2:
+        # async start result = (operand_alias, result, ...) — take result
+        total = shapes[1].bytes
+    ring = (g - 1) / g if g > 1 else 0.0
+    if op == "all-reduce":
+        wire = 2.0 * total * ring
+    elif op in ("all-gather", "collective-broadcast"):
+        wire = total * ring          # result bytes
+    elif op == "reduce-scatter":
+        wire = total * g * ring      # result is the scattered shard; operand = g*result
+    elif op in ("all-to-all", "ragged-all-to-all"):
+        wire = total * ring
+    elif op == "collective-permute":
+        wire = float(total)
+    else:
+        wire = float(total)
+    return CollectiveStat(op, wire, float(total), g, stride)
+
+
+class HloCostModel:
+    """Walks the parsed module and produces trip-count-corrected costs."""
+
+    def __init__(self, text: str):
+        self.comps = parse_hlo_module(text)
+        self.entry = next((c for c in self.comps.values() if c.is_entry), None)
+        self._memo: dict = {}
+
+    def _instr_flops(self, comp: Computation, instr: Instruction) -> tuple:
+        """Return (flops, transcendentals) for a single instruction
+        (excluding called computations, which the caller recurses into —
+        except fusions/dots which we handle here)."""
+        op = instr.opcode
+        if op == "dot":
+            out_elems = sum(s.elements for s in instr.shapes)
+            lhs_contract = _parse_dims(instr.attrs, "lhs_contracting_dims")
+            lhs_name = instr.operands[0] if instr.operands else None
+            k = 1
+            lhs = comp.instructions.get(lhs_name)
+            if lhs is not None and lhs.shapes:
+                for d in lhs_contract:
+                    if d < len(lhs.shapes[0].dims):
+                        k *= lhs.shapes[0].dims[d]
+            return 2.0 * out_elems * k, 0.0
+        if op == "convolution":
+            out_elems = sum(s.elements for s in instr.shapes)
+            sz = re.search(r"window=\{size=([0-9x]+)", instr.attrs)
+            window = 1
+            if sz:
+                for d in sz.group(1).split("x"):
+                    window *= int(d)
+            # depthwise vs dense: feature_group_count
+            fg = re.search(r"feature_group_count=(\d+)", instr.attrs)
+            fg = int(fg.group(1)) if fg else 1
+            in_ch = 1
+            lhs = comp.instructions.get(instr.operands[0]) if instr.operands else None
+            if lhs is not None and lhs.shapes and len(lhs.shapes[0].dims) >= 2:
+                # NCW/NCHW assumed: channels = dim 1
+                in_ch = lhs.shapes[0].dims[1]
+            return 2.0 * out_elems * window * (in_ch // max(fg, 1)), 0.0
+        if op in ("exponential", "log", "tanh", "logistic", "power", "sine",
+                  "cosine", "rsqrt", "sqrt", "erf", "exponential-minus-one",
+                  "log-plus-one", "atan2", "cbrt"):
+            n = sum(s.elements for s in instr.shapes)
+            return 0.0, float(n)
+        if op in _ELEMENTWISE_FLOP_OPS:
+            return float(sum(s.elements for s in instr.shapes)), 0.0
+        if op in ("reduce", "reduce-window"):
+            in_elems = 0
+            for oname in instr.operands:
+                oi = comp.instructions.get(oname)
+                if oi is not None and oi.shapes:
+                    in_elems += oi.shapes[0].elements
+            return float(in_elems), 0.0
+        return 0.0, 0.0
+
+    def _operand_bytes(self, comp: Computation, instr: Instruction,
+                       index: int) -> float:
+        oi = comp.instructions.get(instr.operands[index]) \
+            if index < len(instr.operands) else None
+        if oi is None or not oi.shapes:
+            return 0.0
+        return float(sum(s.bytes for s in oi.shapes))
+
+    def _instr_bytes(self, comp: Computation, instr: Instruction) -> float:
+        if instr.opcode in _FREE_OPS or instr.opcode.endswith("-done"):
+            return 0.0
+        op = instr.opcode
+        out_b = float(sum(s.bytes for s in instr.shapes))
+        if op == "convert":
+            # pure dtype converts are CPU-backend artifacts: XLA:CPU upcasts
+            # the whole bf16 graph to f32; on TPU the graph stays bf16 and
+            # these ops do not exist. Charged zero (DESIGN.md §8).
+            return 0.0
+        # ops that touch only a slice of their big operand (TPU executes
+        # these in place / as windowed DMAs; charging the full operand would
+        # overcount the scanned layer stack by num_groups x):
+        if op == "dynamic-slice":
+            return 2.0 * out_b                      # read slice + write
+        if op == "dynamic-update-slice":
+            upd = self._operand_bytes(comp, instr, 1)
+            return 2.0 * upd                        # read update + write region
+        if op == "gather":
+            return 2.0 * out_b + self._operand_bytes(comp, instr, 1)
+        if op == "scatter":
+            upd = self._operand_bytes(comp, instr, 2)
+            idx = self._operand_bytes(comp, instr, 1)
+            return 2.0 * upd + idx
+        if op == "broadcast":
+            return out_b + self._operand_bytes(comp, instr, 0)
+        if op == "fusion":
+            return self._fusion_bytes(comp, instr)
+        total = out_b
+        for i in range(len(instr.operands)):
+            total += self._operand_bytes(comp, instr, i)
+        return float(total)
+
+    def _fusion_bytes(self, comp: Computation, instr: Instruction) -> float:
+        """Fusion boundary traffic with slice-awareness: an operand consumed
+        only by dynamic-slice/gather inside the fusion contributes the slice
+        size; a root dynamic-update-slice contributes the update size (XLA
+        performs loop-carried DUS in place)."""
+        callee = self.comps.get(instr.called[0]) if instr.called else None
+        if callee is None:
+            total = float(sum(s.bytes for s in instr.shapes))
+            for i in range(len(instr.operands)):
+                total += self._operand_bytes(comp, instr, i)
+            return total
+        # parameter name -> index (from "parameter(N)" raw operand text)
+        param_idx = {}
+        for ins in callee.instructions.values():
+            if ins.opcode == "parameter":
+                nm = re.match(r"\s*(\d+)", ins.raw_operands)
+                param_idx[ins.name] = int(nm.group(1)) if nm else None
+        # consumer map; convert/bitcast/copy are layout/dtype plumbing that
+        # TPU folds into the surrounding op -> trace through them.
+        transparent = ("convert", "bitcast", "copy")
+        all_consumers: dict = {}
+        for ins in callee.instructions.values():
+            for o in ins.operands:
+                all_consumers.setdefault(o, []).append(ins)
+
+        def terminal_consumers(name, depth=0):
+            out = []
+            for c in all_consumers.get(name, []):
+                if c.opcode in transparent and depth < 8:
+                    out.extend(terminal_consumers(c.name, depth + 1) or [c])
+                else:
+                    out.append(c)
+            return out
+
+        total = 0.0
+        for pname, idx in param_idx.items():
+            cons = terminal_consumers(pname)
+            if not cons or all(c.opcode in transparent for c in cons):
+                continue  # feeds the root only through converts: identity
+            if cons and all(c.opcode in ("dynamic-slice", "gather")
+                            for c in cons):
+                total += sum(sum(s.bytes for s in c.shapes) for c in cons)
+            elif cons and all(c.opcode in ("dynamic-update-slice", "scatter")
+                              for c in cons):
+                # parameter reaches in-place update ops only; if it is the
+                # TARGET (operand 0 chain) there is no full-array read on
+                # TPU. If it is the update/indices operand, charge that.
+                for c in cons:
+                    upd_i = 1 if c.opcode == "dynamic-update-slice" else 2
+                    upd = callee.instructions.get(c.operands[upd_i]) \
+                        if len(c.operands) > upd_i else None
+                    feeds_target = _feeds(callee, pname, c.operands[0],
+                                          transparent)
+                    if not feeds_target and upd is not None and upd.shapes:
+                        total += sum(s.bytes for s in upd.shapes)
+            elif idx is not None and idx < len(instr.operands):
+                total += self._operand_bytes(comp, instr, idx)
+        # result side: root DUS (possibly behind convert/bitcast/copy
+        # plumbing) writes only the update region in place
+        def peel(ins, depth=0):
+            while ins is not None and ins.opcode in transparent \
+                    and ins.operands and depth < 8:
+                ins = callee.instructions.get(ins.operands[0])
+                depth += 1
+            return ins
+
+        root = None
+        for ins in callee.instructions.values():
+            root = ins   # last instruction is ROOT in printed HLO
+        roots = [root] if root is not None else []
+        if root is not None and root.opcode == "tuple":
+            roots = [callee.instructions.get(o) for o in root.operands]
+        out_total = 0.0
+        for r in roots:
+            r = peel(r)
+            if r is None:
+                continue
+            if r.opcode == "parameter":
+                continue  # identity / pure-convert fusion: no real traffic
+            if r.opcode in ("dynamic-update-slice", "scatter"):
+                upd_i = 1 if r.opcode == "dynamic-update-slice" else 2
+                upd = callee.instructions.get(r.operands[upd_i]) \
+                    if len(r.operands) > upd_i else None
+                out_total += (sum(s.bytes for s in upd.shapes)
+                              if upd is not None and upd.shapes else 0.0)
+            else:
+                out_total += float(sum(s.bytes for s in r.shapes))
+        if not roots:
+            out_total = float(sum(s.bytes for s in instr.shapes))
+        return total + out_total
+
+    def comp_cost(self, name: str, *, charge_bytes: bool = True) -> HloCost:
+        key = (name, charge_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps[name]
+        cost = HloCost()
+        for instr in comp.instructions.values():
+            col = _collective_cost(instr)
+            if col is not None:
+                cost.collectives.append(col)
+                cost.bytes_accessed += self._instr_bytes(comp, instr) if charge_bytes else 0.0
+                continue
+            if instr.opcode == "while":
+                trip = instr.trip_count if instr.trip_count else 1
+                for callee in instr.called:
+                    cost.add(self.comp_cost(callee, charge_bytes=charge_bytes), trip)
+                continue
+            if instr.opcode == "fusion":
+                # flops: recurse (dots inside fusions), bytes: fusion boundary only
+                for callee in instr.called:
+                    sub = self.comp_cost(callee, charge_bytes=False)
+                    cost.flops += sub.flops
+                    cost.transcendentals += sub.transcendentals
+                    for c in sub.collectives:
+                        cost.collectives.append(c)
+                if charge_bytes:
+                    cost.bytes_accessed += self._instr_bytes(comp, instr)
+                continue
+            if instr.opcode in ("call", "conditional", "async-start", "map"):
+                for callee in instr.called:
+                    cost.add(self.comp_cost(callee, charge_bytes=charge_bytes))
+                continue
+            if instr.opcode in ("reduce", "sort", "scatter", "select-and-scatter",
+                                "reduce-window"):
+                f, t = self._instr_flops(comp, instr)
+                cost.flops += f
+                cost.transcendentals += t
+                if charge_bytes:
+                    cost.bytes_accessed += self._instr_bytes(comp, instr)
+                continue
+            f, t = self._instr_flops(comp, instr)
+            cost.flops += f
+            cost.transcendentals += t
+            if charge_bytes:
+                cost.bytes_accessed += self._instr_bytes(comp, instr)
+        self._memo[key] = cost
+        return cost
+
+    def entry_cost(self) -> HloCost:
+        if self.entry is None:
+            return HloCost()
+        return self.comp_cost(self.entry.name)
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    return HloCostModel(text).entry_cost()
+
+
+def cost_summary(cost: HloCost) -> dict:
+    by_stride = cost.wire_bytes_by_stride()
+    by_op: dict = {}
+    for c in cost.collectives:
+        key = c.opcode
+        by_op[key] = by_op.get(key, 0.0) + c.bytes_moved * c.count
+    return {
+        "flops": cost.flops,
+        "transcendentals": cost.transcendentals,
+        "bytes_accessed": cost.bytes_accessed,
+        "collective_wire_bytes": cost.collective_wire_bytes,
+        "collective_payload_bytes": cost.collective_payload_bytes,
+        "wire_bytes_by_stride": {str(k): v for k, v in by_stride.items()},
+        "wire_bytes_by_op": by_op,
+    }
+
+
+# ----------------------------------------------------------------------------
+# "Profiler": aggregate trip-count-corrected costs by jax op_name metadata
+# (no wall clock on CPU — the lowered module is the profile).
+# ----------------------------------------------------------------------------
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _opname_bucket(attrs: str, depth: int = 3) -> str:
+    m = _OPNAME_RE.search(attrs)
+    if not m:
+        return "<none>"
+    name = m.group(1)
+    # strip jit(...)/ prefix and keep a few trailing segments
+    parts = [p for p in name.split("/") if p]
+    tail = [p for p in parts if not p.startswith("jit(")]
+    return "/".join(tail[-depth:]) if tail else name
+
+
+def profile_by_opname(text: str, depth: int = 3, top: int = 25):
+    """Returns list of (bucket, flops, bytes) sorted by bytes desc."""
+    model = HloCostModel(text)
+    agg: dict = {}
+
+    def add(bucket, f, b):
+        cur = agg.get(bucket, [0.0, 0.0])
+        cur[0] += f
+        cur[1] += b
+        agg[bucket] = cur
+
+    def walk(comp_name: str, mult: float):
+        comp = model.comps[comp_name]
+        for instr in comp.instructions.values():
+            if instr.opcode == "while":
+                trip = instr.trip_count or 1
+                for c in instr.called:
+                    walk(c, mult * trip)
+                continue
+            if instr.opcode in ("call", "conditional"):
+                for c in instr.called:
+                    walk(c, mult)
+                continue
+            b = model._instr_bytes(comp, instr) * mult
+            f = 0.0
+            if instr.opcode == "fusion":
+                for c in instr.called:
+                    sub = model.comp_cost(c, charge_bytes=False)
+                    f += sub.flops * mult
+            else:
+                f = model._instr_flops(comp, instr)[0] * mult
+            add(_opname_bucket(instr.attrs, depth), f, b)
+
+    if model.entry is not None:
+        walk(model.entry.name, 1.0)
+    rows = sorted(((k, v[0], v[1]) for k, v in agg.items()),
+                  key=lambda r: -r[2])
+    return rows[:top]

@@ -1,0 +1,55 @@
+"""Pytree utilities used across the framework."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_map_with_path(fn, tree, *rest):
+    """jax.tree.map with a '/'-joined string path as the first argument."""
+
+    def _fmt(path) -> str:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, *leaves: fn(_fmt(path), *leaves), tree, *rest
+    )
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        total += size * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_num_params(tree) -> int:
+    """Total number of scalar elements across all leaves."""
+    return sum(int(np.prod(l.shape)) if l.shape else 1 for l in jax.tree.leaves(tree))
+
+
+def tree_allclose(a, b, *, rtol=1e-5, atol=1e-6) -> bool:
+    ok = True
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        ok = ok and np.allclose(np.asarray(la), np.asarray(lb), rtol=rtol, atol=atol)
+    return ok
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree
+    )

@@ -1,0 +1,97 @@
+"""Token-distribution properties (paper Eqs 2-3, 23), incl. hypothesis
+property tests on the clipping/order-statistic invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import (
+    DeterministicTokens, EmpiricalTokens, GeometricTokens, LogNormalTokens,
+    TruncGaussianTokens, UniformTokens)
+
+
+def test_lognormal_moments():
+    d = LogNormalTokens(7.0, 0.7)
+    # E[N] = exp(mu + sigma^2/2)
+    assert abs(d.mean() - np.exp(7 + 0.7 ** 2 / 2)) / d.mean() < 0.01
+
+
+def test_clipped_moments_match_bruteforce():
+    d = LogNormalTokens(6.0, 0.5, support=4096)
+    for n_max in (100, 500, 2000):
+        m1, m2 = d.clipped_moments(n_max)
+        clipped = np.minimum(d.support, n_max)
+        b1 = (clipped * d.pmf).sum()
+        b2 = (clipped.astype(float) ** 2 * d.pmf).sum()
+        assert abs(m1 - b1) < 1e-6 * max(b1, 1)
+        assert abs(m2 - b2) < 1e-6 * max(b2, 1)
+
+
+def test_clip_distribution_consistent_with_moments():
+    d = TruncGaussianTokens(800, 200)
+    c = d.clip(900)
+    m1, m2 = d.clipped_moments(900)
+    assert abs(c.mean() - m1) < 1e-6 * m1
+    assert abs(c.second_moment() - m2) < 1e-6 * m2
+
+
+def test_max_order_stat_uniform_closed_form():
+    m = 1000
+    d = UniformTokens(m)
+    for b in (1, 2, 8, 32):
+        # E[max of b uniforms on 0..m] ~ m*b/(b+1)  (paper SIV-B1)
+        el = d.max_order_stat_mean(b)
+        assert abs(el - m * b / (b + 1)) < 2.0
+
+
+def test_max_order_stat_monte_carlo():
+    d = LogNormalTokens(5.0, 0.6, support=2048)
+    rng = np.random.default_rng(0)
+    for b in (4, 16):
+        samples = d.sample(rng, (20000, b)).max(axis=1)
+        el = d.max_order_stat_mean(b)
+        assert abs(el - samples.mean()) / el < 0.03
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_max=st.integers(min_value=1, max_value=4000),
+       mu=st.floats(min_value=4.0, max_value=7.0),
+       sigma=st.floats(min_value=0.2, max_value=1.0))
+def test_clipping_reduces_moments(n_max, mu, sigma):
+    d = LogNormalTokens(mu, sigma, support=8192)
+    m1, m2 = d.clipped_moments(n_max)
+    assert m1 <= d.mean() + 1e-9
+    assert m2 <= d.second_moment() + 1e-9
+    assert m1 <= n_max and m2 <= n_max ** 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(b1=st.integers(min_value=1, max_value=30),
+       b2=st.integers(min_value=31, max_value=200))
+def test_order_stat_monotone_in_batch(b1, b2):
+    d = TruncGaussianTokens(500, 150)
+    assert d.max_order_stat_mean(b1) <= d.max_order_stat_mean(b2) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_max=st.integers(min_value=1, max_value=3000))
+def test_utility_bounds_and_monotone(n_max):
+    d = LogNormalTokens(6.5, 0.7, support=8192)
+    u = d.utility_after_clip(n_max)
+    assert 0.0 <= u <= 1.0
+    assert d.utility_after_clip(n_max + 200) >= u - 1e-9
+
+
+def test_empirical_roundtrip():
+    rng = np.random.default_rng(1)
+    src = LogNormalTokens(5.5, 0.5, support=2048)
+    samples = src.sample(rng, 50_000)
+    emp = EmpiricalTokens(samples)
+    assert abs(emp.mean() - src.mean()) / src.mean() < 0.02
+
+
+def test_deterministic_and_geometric():
+    d = DeterministicTokens(100)
+    assert d.mean() == 100 and d.var() < 1e-9
+    g = GeometricTokens(50.0)
+    assert abs(g.mean() - 50.0) / 50 < 0.02

@@ -1,0 +1,87 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.ragged_decode_attention import (
+    decode_attention_reference, ragged_decode_attention)
+from repro.kernels.rmsnorm import fused_rmsnorm, rmsnorm_reference
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,hq,hkv,d,win", [
+    (2, 256, 4, 4, 64, None),
+    (1, 512, 8, 2, 128, None),
+    (2, 256, 4, 2, 128, 128),
+    (1, 128, 2, 1, 256, None),
+    (1, 384, 6, 3, 64, 96),
+])
+def test_flash_attention_sweep(b, s, hq, hkv, d, win, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, window=win, block_q=64, block_kv=64)
+    ref = attention_reference(q, k, v, window=win)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,hq,hkv,d", [
+    (4, 512, 8, 2, 64),
+    (2, 256, 4, 4, 128),
+    (3, 1024, 16, 8, 128),
+    (1, 128, 2, 2, 256),
+])
+def test_ragged_decode_sweep(b, s, hq, hkv, d, dtype):
+    ks = jax.random.split(RNG, 4)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32).astype(dtype)
+    lens = jax.random.randint(ks[3], (b,), 1, s)
+    out = ragged_decode_attention(q, kc, vc, lens, block_kv=128)
+    ref = decode_attention_reference(q, kc, vc, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_ragged_decode_ignores_stale_cache():
+    """Entries beyond lengths must not affect the output (elastic batching:
+    a freed slot can hold garbage)."""
+    b, s, h, d = 2, 256, 4, 64
+    ks = jax.random.split(RNG, 4)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    lens = jnp.array([64, 192], jnp.int32)
+    out1 = ragged_decode_attention(q, kc, vc, lens, block_kv=64)
+    kc2 = kc.at[0, 64:].set(1e4)
+    vc2 = vc.at[0, 64:].set(-1e4)
+    out2 = ragged_decode_attention(q, kc2, vc2, lens, block_kv=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 64, 256), (1, 128, 512), (4, 32, 128)])
+def test_fused_rmsnorm_sweep(shape, dtype):
+    ks = jax.random.split(RNG, 3)
+    x = jax.random.normal(ks[0], shape, jnp.float32).astype(dtype)
+    r = jax.random.normal(ks[1], shape, jnp.float32).astype(dtype)
+    w = jax.random.normal(ks[2], (shape[-1],), jnp.float32) * 0.1
+    res, nrm = fused_rmsnorm(x, r, w, block_rows=32)
+    res_ref, nrm_ref = rmsnorm_reference(x, r, w)
+    np.testing.assert_allclose(
+        np.asarray(res, np.float32), np.asarray(res_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(nrm, np.float32), np.asarray(nrm_ref, np.float32), **_tol(dtype))

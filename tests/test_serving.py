@@ -1,0 +1,132 @@
+"""Serving engine + schedulers + adaptive control plane."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.control import AdaptiveController
+from repro.core.distributions import LogNormalTokens, UniformTokens
+from repro.core.latency_model import (
+    BatchLatencyModel, LatencyModel, fit_batch_latency_model,
+    fit_latency_model, linear_fit_r2)
+from repro.core.simulate import simulate_dynamic_batching, simulate_mg1
+from repro.data.pipeline import make_request_stream
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.metrics import summarize
+from repro.serving.scheduler import (
+    ContinuousBatchScheduler, DynamicBatchScheduler, ElasticBatchScheduler,
+    FCFSScheduler, FixedBatchScheduler, ModelClock)
+
+LAT1 = LatencyModel(a=0.0212, c=1.79)
+LATB = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+CLOCK = ModelClock(LAT1, LATB)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("qwen2.5-3b")
+    cfg = dataclasses.replace(cfg, num_layers=2)
+    return Engine(cfg, EngineConfig(max_batch=4, max_seq=128,
+                                    prompt_bucket=16))
+
+
+def test_engine_generates_requested_tokens(engine):
+    prompts = [np.arange(4, dtype=np.int32) + i for i in range(3)]
+    res = engine.generate(prompts, [8, 3, 5])
+    assert list(res["produced"]) == [8, 3, 5]
+    # padded mode: everyone completes at batch end
+    assert np.allclose(res["completion_seconds"],
+                       res["completion_seconds"].max())
+
+
+def test_engine_elastic_early_exit(engine):
+    prompts = [np.arange(4, dtype=np.int32) + i for i in range(3)]
+    res = engine.generate(prompts, [16, 2, 6], elastic=True)
+    assert list(res["produced"]) == [16, 2, 6]
+    c = res["completion_seconds"]
+    assert c[1] < c[2] < c[0]          # short replies exit earlier
+
+
+def test_engine_elastic_same_tokens_as_padded(engine):
+    """Elastic scheduling must not change WHAT is generated."""
+    prompts = [np.arange(6, dtype=np.int32)]
+    r1 = engine.generate(prompts, [12])
+    r2 = engine.generate(prompts, [12], elastic=True)
+    assert list(r1["produced"]) == list(r2["produced"])
+
+
+def test_engine_nmax_clipping(engine):
+    prompts = [np.arange(4, dtype=np.int32)]
+    res = engine.generate(prompts, [20], n_max=5)
+    assert list(res["produced"]) == [5]
+
+
+def test_scheduler_matches_simulator():
+    """DynamicBatchScheduler on the model clock == core.simulate (same
+    logic, independent implementations)."""
+    uni = UniformTokens(1000)
+    reqs = make_request_stream(30_000, lam=0.1, dist=uni, vocab=100, seed=11)
+    s = summarize(DynamicBatchScheduler(CLOCK).run(reqs), warmup_frac=0.1)
+    sim = simulate_dynamic_batching(0.1, uni, LATB,
+                                    num_requests=30_000, seed=11)
+    assert abs(s["mean_wait"] - sim["mean_wait"]) / sim["mean_wait"] < 0.02
+
+
+def test_fcfs_scheduler_matches_mg1_sim():
+    ln = LogNormalTokens(6.0, 0.5, support=4096)
+    reqs = make_request_stream(30_000, lam=0.05, dist=ln, vocab=100, seed=3)
+    s = summarize(FCFSScheduler(CLOCK, n_max=800).run(reqs), warmup_frac=0.1)
+    sim = simulate_mg1(0.05, ln, LAT1, n_max=800,
+                       num_requests=30_000, seed=3)
+    assert abs(s["mean_wait"] - sim["mean_wait"]) / max(sim["mean_wait"], 0.1) < 0.25
+
+
+def test_policy_ordering_elastic_continuous():
+    """elastic <= dynamic; continuous crushes queueing delay."""
+    uni = UniformTokens(1000)
+    reqs = make_request_stream(20_000, lam=0.3, dist=uni, vocab=100, seed=7)
+    w_dyn = summarize(DynamicBatchScheduler(CLOCK).run(reqs))["mean_wait"]
+    w_ela = summarize(ElasticBatchScheduler(CLOCK).run(reqs))["mean_wait"]
+    w_con = summarize(ContinuousBatchScheduler(CLOCK, slots=64).run(reqs))["mean_wait"]
+    assert w_ela <= w_dyn * 1.02
+    assert w_con < w_ela
+
+
+def test_controller_recommends_clip_and_policy():
+    ctrl = AdaptiveController(LAT1, LATB, theta=119 / 120,
+                              elastic_available=True, min_samples=64)
+    rng = np.random.default_rng(0)
+    ln = LogNormalTokens(7.0, 0.7)
+    t = 0.0
+    for n in ln.sample(rng, 512):
+        t += rng.exponential(40.0)
+        ctrl.observe_arrival(t)
+        ctrl.observe_completion(int(n))
+    rec = ctrl.recommendation(force=True)
+    assert rec.policy == "elastic"
+    assert rec.heavy_tailed
+    assert 800 <= rec.n_max <= 3200         # paper-range optimum
+    assert rec.b_max is None or rec.b_max >= 1
+
+
+def test_controller_warmup_passthrough():
+    ctrl = AdaptiveController(LAT1, LATB, min_samples=64)
+    rec = ctrl.recommendation()
+    assert rec.n_max is None and rec.details["reason"] == "warmup"
+
+
+def test_calibration_fits():
+    n = np.array([32, 64, 128, 256, 512])
+    t = 0.02 * n + 0.6 + np.random.default_rng(0).normal(0, 1e-3, 5)
+    lat = fit_latency_model(n, t)
+    assert abs(lat.a - 0.02) < 1e-3 and abs(lat.c - 0.6) < 0.05
+    assert linear_fit_r2(n, t) > 0.999
+    bs = np.array([1, 2, 4, 8, 1, 2, 4, 8], np.float64)
+    ls = np.array([100, 100, 100, 100, 300, 300, 300, 300], np.float64)
+    tt = 0.03 * bs + 0.4 + (2e-4 * bs + 0.01) * ls
+    blat = fit_batch_latency_model(bs, ls, tt)
+    assert abs(blat.k3 - 2e-4) < 5e-5
+    assert abs(blat.k4 - 0.01) < 2e-3

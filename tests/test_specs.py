@@ -1,0 +1,52 @@
+"""Dry-run cell construction for ALL 40 (arch x shape) cells: shape math,
+spec trees and step functions must build without a mesh (no allocation, no
+compile — the compile proof is scripts/run_dryruns.sh + its artifacts)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ARCH_IDS, SHAPE_IDS, SHAPES, get_config, shape_applicable)
+from repro.launch.specs import build_cell
+from repro.models.config import ModelConfig
+from repro.models.model import param_specs
+from repro.models.params import Spec, is_spec
+from repro.utils.tree import tree_size_bytes
+
+import jax
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", SHAPE_IDS)
+def test_cell_builds(arch, shape):
+    cfg = get_config(arch)
+    if not shape_applicable(cfg, shape):
+        pytest.skip("long_500k x full attention (DESIGN.md §4)")
+    cell = build_cell(cfg, shape, mesh=None)
+    leaves = jax.tree.leaves(cell.args)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert cell.tokens_per_step == (
+        SHAPES[shape]["global_batch"] * SHAPES[shape]["seq_len"]
+        if cell.kind != "decode" else SHAPES[shape]["global_batch"])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_bytes_reasonable(arch):
+    """bf16 weights of the full config match param_count (shape math)."""
+    cfg = get_config(arch)
+    specs = param_specs(cfg)
+    n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+        specs, is_leaf=is_spec))
+    assert n == cfg.param_count()
+
+
+def test_decode_cache_bytes_vs_hand_count():
+    """yi-9b decode_32k KV cache: 48L x 2 x 4 kvh x 128 d x 32768 s x 128 b
+    x 2B = ~412 GB global."""
+    from repro.models.model import cache_specs
+    cfg = get_config("yi-9b")
+    cs = cache_specs(cfg, batch=128, max_seq=32768)
+    total = sum(int(np.prod(s.shape)) * 2 for s in jax.tree.leaves(
+        cs, is_leaf=is_spec))
+    expect = 48 * 2 * 4 * 128 * 32768 * 128 * 2
+    assert total == expect
