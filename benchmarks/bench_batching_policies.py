@@ -2,20 +2,57 @@
 arrival rate (uniform(0,1000) outputs), with the Inoue-style upper bound
 (Eq 16 via the Eq 20/26 linearizations). Also runs the policies end-to-end
 through the serving schedulers (same virtual-timeline discipline the real
-engine uses) — analytic bound vs simulation vs scheduler must agree."""
+engine uses) — analytic bound vs simulation vs scheduler must agree.
+
+The λ-grid itself runs on the vectorized fast simulators (one vmapped
+per-request scan over every (λ, policy) lane — repro.core.fastsim); a
+reference-vs-fast timing section at 200k requests records the speedup to
+``benchmarks/BENCH_simulators.json`` so the perf trajectory is tracked in
+git. The NumPy reference loops stay the cross-checked oracle: the bench
+asserts fast == reference on one (λ, policy) cell every run."""
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from benchmarks.common import emit, timer
+from benchmarks.common import emit, emit_bench, timer
+
+
+def _time_reference_loops(lams, uni, lat, n_req):
+    from repro.core.simulate import simulate_dynamic_batching
+    t0 = time.perf_counter()
+    out = {}
+    for lam in lams:
+        out[("dyn", lam)] = simulate_dynamic_batching(
+            lam, uni, lat, num_requests=n_req, seed=3)["mean_wait"]
+        out[("ela", lam)] = simulate_dynamic_batching(
+            lam, uni, lat, elastic=True, num_requests=n_req,
+            seed=3)["mean_wait"]
+    return out, time.perf_counter() - t0
+
+
+def _time_fast_sweep(lams, uni, lat, n_req):
+    from repro.core.fastsim import simulate_policy_sweep_fast
+    policies = {"dyn": dict(kind="dynamic"), "ela": dict(kind="elastic")}
+    # cold call includes XLA compile; the warm call is the steady-state
+    # throughput every later sweep in the process enjoys
+    t0 = time.perf_counter()
+    res = simulate_policy_sweep_fast(lams, uni, lat, policies,
+                                     num_requests=n_req, seed=3)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = simulate_policy_sweep_fast(lams, uni, lat, policies,
+                                     num_requests=n_req, seed=3)
+    t_warm = time.perf_counter() - t0
+    return res, t_cold, t_warm
 
 
 def main(quick: bool = False):
     from repro.core.bulk import dynamic_batching_bound, elastic_batching_bound
     from repro.core.distributions import UniformTokens
     from repro.core.latency_model import BatchLatencyModel, LatencyModel
-    from repro.core.simulate import simulate_dynamic_batching
     from repro.data.pipeline import make_request_stream
     from repro.serving.metrics import summarize
     from repro.serving.scheduler import (
@@ -30,19 +67,50 @@ def main(quick: bool = False):
     derived = {}
     gaps = []
     with timer() as t_all:
-        for lam in lams:
-            d = simulate_dynamic_batching(lam, uni, lat,
-                                          num_requests=n_req, seed=3)
-            e = simulate_dynamic_batching(lam, uni, lat, elastic=True,
-                                          num_requests=n_req, seed=3)
+        # ------ ref-vs-fast perf record (acceptance: fast >= 10x ref) ------
+        # always at 200k requests; quick/CI mode trims the lambda grid so
+        # the reference-loop half doesn't dominate the quick run
+        n_perf = 200_000
+        perf_lams = [0.2, 0.8] if quick else lams
+        ref_waits, t_ref = _time_reference_loops(perf_lams, uni, lat, n_perf)
+        fast_waits, t_cold, t_warm = _time_fast_sweep(perf_lams, uni, lat,
+                                                      n_perf)
+        for li, lam in enumerate(perf_lams):
+            # fast must agree with the oracle on the same seed
+            assert abs(fast_waits["dyn"][li] - ref_waits[("dyn", lam)]) < 1e-6
+            assert abs(fast_waits["ela"][li] - ref_waits[("ela", lam)]) < 1e-6
+        derived["sim_speedup_cold"] = t_ref / t_cold
+        derived["sim_speedup_warm"] = t_ref / t_warm
+        emit_bench("simulators", {
+            "workload": f"{len(perf_lams)} lambdas x (dynamic, elastic), "
+                        f"{n_perf} requests each",
+            "reference_loops_s": t_ref,
+            "fast_sweep_cold_s": t_cold,   # includes one-time XLA compile
+            "fast_sweep_warm_s": t_warm,
+            "speedup_cold": t_ref / t_cold,
+            "speedup_warm": t_ref / t_warm,
+        })
+
+        # ------ Fig 5 grid on the fast path (oracle-checked above) ------
+        if n_req == n_perf and perf_lams == lams:
+            grid = fast_waits
+        else:
+            from repro.core.fastsim import simulate_policy_sweep_fast
+            grid = simulate_policy_sweep_fast(
+                lams, uni, lat,
+                {"dyn": dict(kind="dynamic"), "ela": dict(kind="elastic")},
+                num_requests=n_req, seed=3)
+        for li, lam in enumerate(lams):
+            d_mean = float(grid["dyn"][li])
+            e_mean = float(grid["ela"][li])
             db = dynamic_batching_bound(uni, lat, lam)["wait_bound"]
             eb = elastic_batching_bound(uni, lat, lam)["wait_bound"]
-            derived[f"dyn_sim_lam{lam}"] = d["mean_wait"]
-            derived[f"ela_sim_lam{lam}"] = e["mean_wait"]
+            derived[f"dyn_sim_lam{lam}"] = d_mean
+            derived[f"ela_sim_lam{lam}"] = e_mean
             derived[f"dyn_bound_lam{lam}"] = db
-            gaps.append(d["mean_wait"] - e["mean_wait"])
-            assert db >= d["mean_wait"] * 0.98, "bound violated"
-            assert eb >= e["mean_wait"] * 0.98, "bound violated"
+            gaps.append(d_mean - e_mean)
+            assert db >= d_mean * 0.98, "bound violated"
+            assert eb >= e_mean * 0.98, "bound violated"
         derived["elastic_advantage_grows_with_lam"] = bool(
             gaps[-1] > gaps[0])
 

@@ -22,6 +22,7 @@ def main(quick: bool = False):
     from repro.core.mg1 import mg1_wait
     from repro.core.policy_opt import (
         optimize_token_limit_v1, optimize_token_limit_v2)
+    from repro.core.fastsim import simulate_mg1_fast
     from repro.core.simulate import simulate_mg1
 
     ln = LogNormalTokens(7.0, 0.7)
@@ -41,13 +42,19 @@ def main(quick: bool = False):
             derived[f"fig4a_EW_n{n}"] = ana
         derived["fig4a_max_rel_err_vs_sim"] = float(max(errs))
 
-        # ---- Fig 4b/4c: impatient users
+        # ---- Fig 4b/4c: impatient users (lax.scan workload recursion;
+        # one cell re-run on the NumPy oracle as a cross-check)
         lam2, tau = 1 / 25, 60.0
+        oracle = simulate_mg1(lam2, ln, LAT, n_max=1300, tau=tau,
+                              num_requests=min(n_req, 60_000), seed=2)
+        check = simulate_mg1_fast(lam2, ln, LAT, n_max=1300, tau=tau,
+                                  num_requests=min(n_req, 60_000), seed=2)
+        assert abs(oracle["mean_wait"] - check["mean_wait"]) < 1e-6
         errs_pi, errs_w = [], []
         for n in (1300, 2000, 3000):
             ex = exact_impatience(ln, LAT, lam2, tau, n)
-            sim = simulate_mg1(lam2, ln, LAT, n_max=n, tau=tau,
-                               num_requests=n_req, seed=2)
+            sim = simulate_mg1_fast(lam2, ln, LAT, n_max=n, tau=tau,
+                                    num_requests=n_req, seed=2)
             errs_pi.append(abs(ex.pi - sim["loss_frac"]))
             errs_w.append(abs(ex.wq_all - sim["mean_wait"]) /
                           max(sim["mean_wait"], 1e-9))

@@ -3,15 +3,21 @@
 
 Demonstrates that the paper's analytic ordering (elastic <= dynamic; clip
 reduces tail) holds on actual executables, and that the controller's
-recommendation agrees with the analytics."""
+recommendation agrees with the analytics.
+
+Also records the fused chunked-decode speedup (ISSUE 1): the same batches
+generated with chunk=1 (per-step reference: one host sync per token) vs the
+fused lax.scan chunks (one sync per chunk), identical tokens asserted, wall
+time and sync counts written to ``benchmarks/BENCH_engine.json``."""
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
-from benchmarks.common import emit, timer
+from benchmarks.common import emit, emit_bench, timer
 
 
 def main(quick: bool = False):
@@ -32,11 +38,50 @@ def main(quick: bool = False):
 
     derived = {}
     with timer() as t_all:
-        pad_time, ela_time = 0.0, 0.0
-        pad_tail, ela_tail = [], []
+        # ------ chunked vs per-step decode (BENCH_engine.json) ------
+        chunk = eng.ecfg.decode_chunk
+        bench_batches = []
         for i in range(n_batches):
             prompts = [np.arange(8, dtype=np.int32) + j for j in range(8)]
             targets = [int(max(t, 1)) for t in dist.sample(rng, 8)]
+            bench_batches.append((prompts, targets))
+        # warm both paths so the record is steady-state, not compile: a
+        # 2*chunk target walks every power-of-two tail executable
+        # (chunk, chunk/2, ..., 1) that later batches can hit
+        warm_prompts = bench_batches[0][0]
+        eng.generate(warm_prompts, [2 * chunk] * len(warm_prompts), chunk=1)
+        eng.generate(warm_prompts, [2 * chunk] * len(warm_prompts),
+                     chunk=chunk)
+        step_s, step_syncs, chunk_s, chunk_syncs = 0.0, 0, 0.0, 0
+        for prompts, targets in bench_batches:
+            t0 = time.perf_counter()
+            r1 = eng.generate(prompts, targets, chunk=1, return_tokens=True)
+            step_s += time.perf_counter() - t0
+            step_syncs += r1["host_syncs"]
+            t0 = time.perf_counter()
+            rc = eng.generate(prompts, targets, chunk=chunk,
+                              return_tokens=True)
+            chunk_s += time.perf_counter() - t0
+            chunk_syncs += rc["host_syncs"]
+            assert r1["tokens"] == rc["tokens"]
+            assert list(r1["produced"]) == list(rc["produced"])
+        derived["chunked_decode_speedup"] = step_s / max(chunk_s, 1e-9)
+        derived["host_syncs_per_step"] = step_syncs
+        derived["host_syncs_chunked"] = chunk_syncs
+        emit_bench("engine", {
+            "workload": f"{n_batches} batches x 8 reqs, lognormal targets "
+                        f"<=96 tokens, decode_chunk={chunk}",
+            "per_step_s": step_s,
+            "chunked_s": chunk_s,
+            "speedup": step_s / max(chunk_s, 1e-9),
+            "host_syncs_per_step": step_syncs,
+            "host_syncs_chunked": chunk_syncs,
+            "sync_reduction": step_syncs / max(chunk_syncs, 1),
+        })
+
+        pad_time, ela_time = 0.0, 0.0
+        pad_tail, ela_tail = [], []
+        for prompts, targets in bench_batches:
             rp = eng.generate(prompts, targets, elastic=False)
             re_ = eng.generate(prompts, targets, elastic=True)
             pad_time += rp["batch_seconds"]

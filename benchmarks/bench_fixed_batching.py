@@ -20,8 +20,9 @@ def main(quick: bool = False):
         mdb1_wait_exact, mdb1_wait_paper, optimal_fixed_batch)
     from repro.core.distributions import LogNormalTokens
     from repro.core.latency_model import BatchLatencyModel
-    from repro.core.simulate import (
-        simulate_dynamic_batching, simulate_fixed_batching)
+    from repro.core.fastsim import (
+        simulate_dynamic_batching_fast, simulate_fixed_batching_fast)
+    from repro.core.simulate import simulate_fixed_batching
 
     ln = LogNormalTokens(7.0, 0.7)
     lat = BatchLatencyModel(k1=0.05, k2=0.5, k3=1e-5, k4=0.002)
@@ -39,7 +40,7 @@ def main(quick: bool = False):
             sim = simulate_fixed_batching(
                 lam, b, None, batch_time=lambda ns, hh=h: hh,
                 num_requests=n_req, seed=4)["mean_wait"]
-            sim_g = simulate_fixed_batching(
+            sim_g = simulate_fixed_batching_fast(
                 lam, b, ln, lat, num_requests=n_req, seed=4)["mean_wait"]
             derived[f"fig6a_b{b}_exact"] = exact
             derived[f"fig6a_b{b}_paperEq25"] = paper
@@ -55,13 +56,13 @@ def main(quick: bool = False):
         # ---- Fig 6b: heavy-tail capping at high load
         lat2 = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
         lam_hi = 1.0
-        unb = simulate_dynamic_batching(lam_hi, ln, lat2,
-                                        num_requests=n_req // 2, seed=5)
-        cap = simulate_dynamic_batching(lam_hi, ln, lat2, b_max=32,
-                                        num_requests=n_req // 2, seed=5)
-        ela = simulate_dynamic_batching(lam_hi, ln, lat2, b_max=32,
-                                        elastic=True,
-                                        num_requests=n_req // 2, seed=5)
+        unb = simulate_dynamic_batching_fast(lam_hi, ln, lat2,
+                                             num_requests=n_req // 2, seed=5)
+        cap = simulate_dynamic_batching_fast(lam_hi, ln, lat2, b_max=32,
+                                             num_requests=n_req // 2, seed=5)
+        ela = simulate_dynamic_batching_fast(lam_hi, ln, lat2, b_max=32,
+                                             elastic=True,
+                                             num_requests=n_req // 2, seed=5)
         derived["fig6b_unbounded_wait"] = unb["mean_wait"]
         derived["fig6b_capped32_wait"] = cap["mean_wait"]
         derived["fig6b_elastic32_wait"] = ela["mean_wait"]

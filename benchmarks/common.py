@@ -9,6 +9,21 @@ import os
 import time
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def emit_bench(name: str, payload: dict) -> str:
+    """Write a tracked perf record to benchmarks/BENCH_<name>.json.
+
+    Unlike ``emit`` (results/ scratch dir), these files are committed so the
+    seed-vs-PR perf trajectory is reviewable in git history. Callers should
+    include the timing baseline being compared against (e.g. the reference
+    simulator loops, per-step decode) and the measured speedup."""
+    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def emit(name: str, seconds: float, derived: dict) -> dict:

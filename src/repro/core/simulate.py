@@ -11,6 +11,12 @@ against these simulators in the test-suite and benchmarks. They model:
   * elastic batching (early-exit replies, Eq 26)  (paper Figs 5, 6b)
 
 Waits are *queueing delays* (arrival -> service start), matching the paper.
+
+These interpreted event loops are the REFERENCE ORACLE: they favour
+obviousness over speed. Production sweeps (λ grids, policy search) should
+use :mod:`repro.core.fastsim`, whose compiled scan/closed-form twins sample
+with the same rng call order and are pinned trajectory-equal to these loops
+by ``tests/test_fastsim.py``.
 """
 
 from __future__ import annotations

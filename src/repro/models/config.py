@@ -78,6 +78,15 @@ class ModelConfig:
     # KV-cache layout: "bshd" (baseline) or "bhsd" (head-major: the decode
     # attention dots read the cache directly, no per-layer transpose copies)
     cache_layout: str = "bshd"
+    # decode attention implementation:
+    #   dense  - padded softmax over the full cache span (baseline)
+    #   ragged - repro.kernels ragged decode kernel: per-request early exit
+    #            over KV blocks, so early-finished slots stop paying padded
+    #            KV compute. bshd layout only (bhsd keeps the dense path).
+    #            block_kv is the largest power of two (<=128) dividing the
+    #            cache span — non-power-of-two spans degrade toward
+    #            block_kv=1, so keep max_seq a power of two.
+    decode_attention_impl: str = "dense"
 
     # vlm
     vision_seq: int = 0              # stub patch-embedding length

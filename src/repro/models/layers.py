@@ -102,6 +102,15 @@ def _project_qkv(p, x, cfg: ModelConfig, ctx: ShardCtx, kv_input=None):
     return q, k, v
 
 
+def _ragged_block_kv(span: int, cap: int = 128) -> int:
+    """Largest power-of-two KV block <= cap that tiles the cache span (the
+    ragged decode kernel requires span % block_kv == 0)."""
+    b = 1
+    while b * 2 <= min(span, cap) and span % (b * 2) == 0:
+        b *= 2
+    return b
+
+
 def _group_query(q, num_kv_heads: int):
     """[B,S,Hq,D] -> [B,S,Hkv,G,D] grouping query heads per KV head."""
     b, s, hq, d = q.shape
@@ -310,9 +319,19 @@ def attention_block(p, x, cfg: ModelConfig, ctx: ShardCtx, *,
             valid = jnp.minimum(kv_lens + 1, span)
             # ring buffer holds the most recent `valid` tokens; absolute RoPE
             # was applied before caching so slot order is irrelevant.
-            out = decode_attention(q, k_cache, v_cache, valid,
-                                   window=None, ctx=ctx,
-                                   layout=cfg.cache_layout)
+            if cfg.decode_attention_impl == "ragged" and not hm:
+                # per-request early exit over KV blocks (elastic batching at
+                # the kernel level): a short request only pays its own span
+                from repro.kernels.ragged_decode_attention.ops import (
+                    ragged_decode_attention)
+                out = ragged_decode_attention(
+                    q[:, 0], k_cache, v_cache, valid,
+                    block_kv=_ragged_block_kv(span),
+                    interpret=jax.default_backend() != "tpu")[:, None]
+            else:
+                out = decode_attention(q, k_cache, v_cache, valid,
+                                       window=None, ctx=ctx,
+                                       layout=cfg.cache_layout)
         else:
             # prefill: attend within the prompt, then store the (windowed)
             # tail of k/v into the cache.

@@ -313,3 +313,12 @@ def split_cache(cache, num_groups: int):
     decode; one-time cost after prefill)."""
     return {f"g{g}": jax.tree.map(lambda l: l[g], cache)
             for g in range(num_groups)}
+
+
+def stack_group_cache(split, num_groups: int):
+    """Inverse of ``split_cache``: {"g<i>": group leaves} -> stacked pytree.
+    Used by the fused decode loop to keep a structure-invariant scan carry
+    when ``cfg.decode_unroll_layers`` makes decode_step return a split
+    cache."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls),
+                        *[split[f"g{g}"] for g in range(num_groups)])

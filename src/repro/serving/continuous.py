@@ -1,10 +1,22 @@
 """Continuous (iteration-level) batching on the real engine — beyond paper.
 
-A fixed pool of decode slots runs one decode step per iteration; whenever a
-slot finishes its request, the next queued request is prefilled in a size-1
+A fixed pool of decode slots runs decode iterations; whenever a slot
+finishes its request, the next queued request is prefilled in a size-1
 bucket and its cache is SPLICED into the pool cache at that slot. Short
 requests neither wait for batch formation nor pay padding decode — the
 paper's elastic batching taken to per-iteration granularity (Orca/vLLM).
+
+Chunked admission (host-sync accounting)
+----------------------------------------
+Decode runs through the engine's fused ``decode_chunk`` (``lax.scan`` over
+up to ``chunk`` steps, one host sync per chunk) instead of one jitted call
+per token. Admission happens at chunk boundaries; to keep the
+refill-immediately semantics, a chunk is cut short at the *earliest*
+remaining completion among active slots whenever requests are still queued
+(so a freed slot is refilled before any avoidable idle decode), and runs
+full ``chunk`` steps once the queue is empty. Per-request completion times
+are interpolated inside a chunk from the scan's per-step active mask.
+``chunk=1`` reproduces the legacy per-step loop sync for sync.
 
 The splice uses the cache spec's logical axes to locate each leaf's batch
 and kv-seq dims, so it works across attention (bshd/bhsd), Mamba state and
@@ -62,15 +74,19 @@ class ContinuousResult:
     completion: np.ndarray      # seconds from serve start
     decode_steps: int
     wall_seconds: float
+    host_syncs: int = 0
 
 
 def serve_continuous(engine, prompts: List[np.ndarray],
                      target_tokens: List[int], *, slots: int = 4,
-                     n_max: Optional[int] = None) -> ContinuousResult:
+                     n_max: Optional[int] = None,
+                     chunk: Optional[int] = None) -> ContinuousResult:
     """Run all requests through a `slots`-wide continuous-batching pool."""
     cfg = engine.cfg
     assert cfg.decode_cache_update in ("scatter", "onehot"), \
         "continuous batching needs per-slot (ragged) cache updates"
+    chunk = int(chunk if chunk is not None else engine.ecfg.decode_chunk)
+    assert chunk >= 1
     n = len(prompts)
     targets = np.asarray(target_tokens)
     if n_max is not None:
@@ -86,8 +102,9 @@ def serve_continuous(engine, prompts: List[np.ndarray],
     completion = np.full(n, np.nan)
 
     t0 = time.perf_counter()
+    syncs0 = engine.host_syncs
     queue = list(range(n))
-    steps = 0
+    steps_total = 0
 
     def admit(slot):
         rid = queue.pop(0)
@@ -110,19 +127,37 @@ def serve_continuous(engine, prompts: List[np.ndarray],
         active = slot_req >= 0
         if not active.any():
             continue
-        tok, pool, _ = engine.decode_batch(
-            pool, jnp.asarray(kv_lens.astype(np.int32)), tok)
-        steps += 1
-        kv_lens[active] = np.minimum(kv_lens[active] + 1,
-                                     engine.ecfg.max_seq - 1)
+        rem = targets[slot_req[active]] - produced[slot_req[active]]
+        # queued work pending: stop the chunk at the earliest completion so
+        # the freed slot refills without idle decode; empty queue: full chunk
+        steps = int(min(chunk, rem.min() if queue else rem.max()))
+        steps = max(steps, 1)
+        # quantize to powers of two (like Engine.generate) so at most
+        # log2(chunk)+1 executables compile per pool size
+        if steps < chunk:
+            steps = 1 << (steps.bit_length() - 1)
+        slot_prod = np.zeros(slots, np.int64)
+        slot_targ = np.zeros(slots, np.int64)
+        slot_prod[active] = produced[slot_req[active]]
+        slot_targ[active] = targets[slot_req[active]]
+        pool, tok, kv_d, prod_d, _, actives, dt = engine.decode_chunk(
+            pool, jnp.asarray(kv_lens.astype(np.int32)), tok,
+            jnp.asarray(slot_prod), jnp.asarray(slot_targ), steps)
+        steps_total += steps
+        kv_lens = np.asarray(kv_d).astype(np.int64)
+        prod_np = np.asarray(prod_d)
+        actives_np = np.asarray(actives)        # [steps, slots]
         now = time.perf_counter() - t0
         for s in np.where(active)[0]:
             rid = slot_req[s]
-            produced[rid] += 1
+            produced[rid] = prod_np[s]
             if produced[rid] >= targets[rid]:
-                completion[rid] = now
+                hit = np.nonzero(actives_np[:, s])[0]
+                fin = int(hit[-1]) if hit.size else 0
+                completion[rid] = now - dt + dt * (fin + 1) / steps
                 slot_req[s] = -1
 
     return ContinuousResult(
         produced=produced, ttft=ttft, completion=completion,
-        decode_steps=steps, wall_seconds=time.perf_counter() - t0)
+        decode_steps=steps_total, wall_seconds=time.perf_counter() - t0,
+        host_syncs=engine.host_syncs - syncs0)

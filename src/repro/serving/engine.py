@@ -8,6 +8,21 @@ finish early, the live requests are gathered into the next-smaller batch
 bucket and decoding continues there (the kernel-level analogue is the ragged
 decode kernel in repro.kernels).
 
+Host-sync accounting (the chunked-decode design)
+------------------------------------------------
+Decoding is driven by ``decode_chunk``: a ``jax.lax.scan`` of up to
+``EngineConfig.decode_chunk`` decode steps compiled once per
+(batch-bucket, step-count) pair. The carry — ``(cache, tok, kv_lens,
+produced)`` — lives on device for the whole chunk, so the host blocks once
+per chunk instead of once per token: O(tokens / chunk) syncs instead of
+O(tokens). Each sync is counted in ``Engine.host_syncs`` and each chunk is
+logged in ``step_log``; ``generate`` reports the syncs it spent so the
+benchmark suite can assert the accounting. Elastic bucket compaction and
+completion bookkeeping happen at chunk boundaries (per-request completion
+times are interpolated inside a chunk from the per-step active mask the scan
+emits). ``decode_batch`` (one step, one sync) is kept as the reference path
+— ``generate(..., chunk=1)`` reproduces it step for step.
+
 The engine serves two roles:
   * run actual tiny models on CPU (examples, wall-clock calibration of the
     paper's a, c, k1..k4 constants),
@@ -24,11 +39,12 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.distributed.sharding import ShardCtx, NULL_CTX
 from repro.models.config import ModelConfig
 from repro.models.model import (
-    param_specs, init_cache, prefill, decode_step)
+    param_specs, init_cache, prefill, decode_step, stack_group_cache)
 from repro.models.params import init_params
 
 
@@ -40,6 +56,7 @@ class EngineConfig:
     cache_dtype: str = "float32"
     greedy: bool = True
     min_bucket: int = 1
+    decode_chunk: int = 32         # decode steps fused per host sync
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -61,7 +78,9 @@ class Engine:
         self.params = params
         self._prefill_fns: Dict[Tuple[int, int], callable] = {}
         self._decode_fns: Dict[int, callable] = {}
-        self.step_log: List[dict] = []    # (kind, batch, seq, seconds)
+        self._chunk_fns: Dict[Tuple[int, int], callable] = {}
+        self.step_log: List[dict] = []    # (kind, batch, seq, seconds[, steps])
+        self.host_syncs = 0               # device->host blocking round-trips
 
     # ------------------------------------------------------------------
     def _get_prefill(self, b: int, s: int):
@@ -85,6 +104,49 @@ class Engine:
 
             self._decode_fns[b] = jax.jit(fn, donate_argnums=(1,))
         return self._decode_fns[b]
+
+    def _get_decode_chunk(self, b: int, steps: int):
+        """Fused multi-step decode: ``steps`` greedy decode iterations as one
+        ``lax.scan``, carrying (cache, tok, kv_lens, produced) device-side.
+
+        Emits the per-step sampled token and active mask so the caller can
+        reconstruct exact token streams / completion steps after the single
+        end-of-chunk sync. ``kv_lens`` advances only for slots still below
+        their target (except in 'uniform' cache-update mode, which requires
+        lock-step positions), so early-exited slots stop moving their ring
+        pointer; with the ragged decode-attention kernel they also stop
+        paying padded KV compute.
+        """
+        key = (b, steps)
+        if key not in self._chunk_fns:
+            cfg, ctx = self.cfg, self.ctx
+            max_seq = self.ecfg.max_seq
+            advance_all = cfg.decode_cache_update == "uniform"
+
+            def fn(params, cache, tok, kv_lens, produced, targets):
+                def body(carry, _):
+                    cache, tok, kv_lens, produced = carry
+                    logits, cache = decode_step(cfg, params, cache, tok,
+                                                kv_lens, ctx=ctx)
+                    if cfg.decode_unroll_layers:
+                        # unrolled decode returns a per-group split dict;
+                        # restack so the scan carry keeps one structure
+                        cache = stack_group_cache(cache, cfg.num_groups)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    active = produced < targets
+                    produced = produced + active.astype(produced.dtype)
+                    step = (jnp.ones_like(kv_lens) if advance_all
+                            else active.astype(kv_lens.dtype))
+                    kv_lens = jnp.minimum(kv_lens + step, max_seq - 1)
+                    return (cache, nxt, kv_lens, produced), (nxt, active)
+
+                carry, (toks, actives) = lax.scan(
+                    body, (cache, tok, kv_lens, produced), None, length=steps)
+                cache, tok, kv_lens, produced = carry
+                return cache, tok, kv_lens, produced, toks, actives
+
+            self._chunk_fns[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._chunk_fns[key]
 
     def new_cache(self, batch_bucket: int):
         return init_cache(self.cfg, batch_bucket, self.ecfg.max_seq,
@@ -111,24 +173,45 @@ class Engine:
                          jnp.asarray(lens))
         last = jax.block_until_ready(last)
         dt = time.perf_counter() - t0
+        self.host_syncs += 1
         self.step_log.append(
             {"kind": "prefill", "batch": b, "seq": s, "seconds": dt})
         return cache, jnp.asarray(lens), last, b, dt
 
     def decode_batch(self, cache, kv_lens, tokens):
-        """One decode step for the whole bucket. Returns (next_tokens, cache,
-        wall_seconds)."""
+        """One decode step for the whole bucket (one host sync). Returns
+        (next_tokens, cache, wall_seconds). Reference path for the fused
+        ``decode_chunk``."""
         b = int(tokens.shape[0])
         fn = self._get_decode(b)
         t0 = time.perf_counter()
         logits, cache = fn(self.params, cache, tokens, kv_lens)
         logits = jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
+        self.host_syncs += 1
         self.step_log.append(
             {"kind": "decode", "batch": b, "seq": int(jnp.max(kv_lens)),
              "seconds": dt})
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, cache, dt
+
+    def decode_chunk(self, cache, kv_lens, tokens, produced, targets,
+                     steps: int):
+        """Run ``steps`` fused decode iterations (one host sync). All array
+        args/results are device-side; returns (cache, tok, kv_lens, produced,
+        step_tokens [steps,B], step_active [steps,B], wall_seconds)."""
+        b = int(tokens.shape[0])
+        fn = self._get_decode_chunk(b, steps)
+        t0 = time.perf_counter()
+        cache, tok, kv_lens, produced, toks, actives = fn(
+            self.params, cache, tokens, kv_lens, produced, targets)
+        tok = jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        self.host_syncs += 1
+        self.step_log.append(
+            {"kind": "decode_chunk", "batch": b, "steps": steps,
+             "seq": int(jnp.max(kv_lens)), "seconds": dt})
+        return cache, tok, kv_lens, produced, toks, actives, dt
 
     def compact(self, cache, kv_lens, tokens, keep_idx: np.ndarray):
         """Gather live slots into a smaller bucket (elastic batching's real
@@ -144,18 +227,25 @@ class Engine:
 
     # ------------------------------------------------------------------
     def generate(self, prompts: List[np.ndarray], target_tokens: List[int],
-                 elastic: bool = False, n_max: Optional[int] = None):
-        """Run one batch to completion.
+                 elastic: bool = False, n_max: Optional[int] = None,
+                 chunk: Optional[int] = None, return_tokens: bool = False):
+        """Run one batch to completion on the fused chunked-decode loop.
 
         Padded ('dynamic') mode decodes everyone for max(target) steps (the
         paper's padding semantics). Elastic mode lets finished replies exit
-        and compacts buckets. Returns dict with per-request completion times
-        (seconds of engine wall time after batch start) and token counts.
+        and compacts buckets at chunk boundaries. ``chunk`` overrides
+        ``EngineConfig.decode_chunk`` (chunk=1 == the per-step reference
+        loop; larger chunks produce identical tokens with O(tokens/chunk)
+        host syncs). Returns dict with per-request completion times (seconds
+        of engine wall time after batch start) and token counts.
         """
+        chunk = int(chunk if chunk is not None else self.ecfg.decode_chunk)
+        assert chunk >= 1
         targets = np.asarray(target_tokens)
         if n_max is not None:
             targets = np.minimum(targets, n_max)
         nreq = len(prompts)
+        syncs0 = self.host_syncs
         cache, kv_lens, last, b, t_prefill = self.prefill_batch(prompts)
         tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         live = np.arange(nreq)
@@ -163,10 +253,21 @@ class Engine:
         done_at = np.full(nreq, np.nan)
         clock = t_prefill
         done_at[targets <= 1] = clock
-        l_max = int(targets.max())
-        for _ in range(1, l_max):
+        out_tokens = ([list(t) for t in
+                       np.asarray(tok)[:nreq, None]] if return_tokens
+                      else None)
+
+        def slot_state(bucket, ids):
+            prod = np.zeros(bucket, np.int64)
+            targ = np.zeros(bucket, np.int64)
+            prod[:len(ids)] = produced[ids]
+            targ[:len(ids)] = targets[ids]
+            return jnp.asarray(prod), jnp.asarray(targ)
+
+        while True:
+            rem = targets[live] - produced[live]
             if elastic:
-                still = live[targets[live] > produced[live]]
+                still = live[rem > 0]
                 if len(still) == 0:
                     break
                 if len(still) <= b // 2 and b > self.ecfg.min_bucket:
@@ -176,33 +277,59 @@ class Engine:
                     cache, kv_lens, tok, b, _ = self.compact(
                         cache, kv_lens, tok, keep)
                     live = still
+                    rem = targets[live] - produced[live]
             else:
                 if np.all(produced >= targets):
                     break
-            tok, cache, dt = self.decode_batch(cache, kv_lens, tok)
-            kv_lens = jnp.minimum(kv_lens + 1, self.ecfg.max_seq - 1)
+            # quantize tail chunks to powers of two: produced counts gate
+            # every step, so shorter chunks never change tokens, and this
+            # bounds the executable count at log2(chunk) per bucket
+            rem_max = int(rem.max())
+            steps = chunk if rem_max >= chunk else 1 << (rem_max.bit_length() - 1)
+            prod_d, targ_d = slot_state(b, live)
+            cache, tok, kv_lens, prod_d, toks, actives, dt = \
+                self.decode_chunk(cache, kv_lens, tok, prod_d, targ_d, steps)
             clock += dt
-            active = live[produced[live] < targets[live]]
-            produced[active] += 1
-            newly = active[produced[active] == targets[active]]
-            done_at[newly] = clock
+            actives_np = np.asarray(actives)            # [steps, b]
+            produced[live] = np.asarray(prod_d)[:len(live)]
+            if return_tokens:
+                toks_np = np.asarray(toks)
+                for s, g in enumerate(live):
+                    out_tokens[g].extend(
+                        toks_np[actives_np[:, s], s].tolist())
+            newly = live[(produced[live] >= targets[live])
+                         & np.isnan(done_at[live])]
+            slot_of = {g: i for i, g in enumerate(live)}
+            for g in newly:
+                hit = np.nonzero(actives_np[:, slot_of[g]])[0]
+                fin = int(hit[-1]) if hit.size else 0
+                # completion interpolated at that step's chunk fraction
+                done_at[g] = clock - dt + dt * (fin + 1) / steps
         done_at[np.isnan(done_at)] = clock
         if not elastic:
             # padded semantics (paper Eq 18): the whole batch is returned
             # when its longest member completes
             done_at[:] = clock
-        return {
+        res = {
             "completion_seconds": done_at,
             "batch_seconds": clock,
             "produced": produced,
             "prefill_seconds": t_prefill,
+            "host_syncs": self.host_syncs - syncs0,
         }
+        if return_tokens:
+            res["tokens"] = out_tokens
+        return res
 
     # ------------------------------------------------------------------
     def calibration_log(self) -> dict:
-        """Measurements for fitting the paper's latency constants."""
+        """Measurements for fitting the paper's latency constants. Chunked
+        decode entries are normalized to per-step seconds so the k3/k4 fit
+        is chunk-size independent."""
         pre = [(e["batch"], e["seq"], e["seconds"])
                for e in self.step_log if e["kind"] == "prefill"]
         dec = [(e["batch"], e["seconds"])
                for e in self.step_log if e["kind"] == "decode"]
+        dec += [(e["batch"], e["seconds"] / e["steps"])
+                for e in self.step_log if e["kind"] == "decode_chunk"]
         return {"prefill": pre, "decode": dec}

@@ -226,11 +226,21 @@ class ContinuousBatchScheduler(_Base):
     """Beyond paper: iteration-level scheduling (Orca/vLLM). ``slots``
     decode streams run concurrently; a finished slot is refilled immediately
     from the queue (one prefill joins the running batch). Queue wait ends
-    when the request's prefill starts."""
+    when the request's prefill starts.
 
-    def __init__(self, clock: ModelClock, slots: int, n_max=None):
+    ``chunk`` mirrors the real engine's fused decode loop
+    (``Engine.decode_chunk``): admission and refill only happen at chunk
+    boundaries, and — like ``serve_continuous`` — a chunk is cut short at
+    the earliest remaining completion while work is queued, so the freed
+    slot refills without idle decode. ``chunk=1`` is the legacy per-step
+    discipline."""
+
+    def __init__(self, clock: ModelClock, slots: int, n_max=None,
+                 chunk: int = 1):
         super().__init__(clock, n_max)
         self.slots = slots
+        assert chunk >= 1
+        self.chunk = chunk
 
     def run(self, reqs: List[Request]) -> ScheduleResult:
         n = len(reqs)
@@ -238,11 +248,11 @@ class ContinuousBatchScheduler(_Base):
         ns = np.array(_clip(reqs, self.n_max), np.int64)
         waits = np.zeros(n)
         e2e = np.zeros(n)
-        remaining = {}                 # slot -> [rid, tokens_left]
+        remaining = {}                 # slot -> tokens_left
         t = 0.0
         head = 0
         while head < n or remaining:
-            # admit
+            # admit (chunk boundary)
             while head < n and arr[head] <= t and len(remaining) < self.slots:
                 waits[head] = t - arr[head]
                 t += self.clock.prefill_time(1)   # prefill piggybacked
@@ -251,15 +261,22 @@ class ContinuousBatchScheduler(_Base):
             if not remaining:
                 t = max(t, arr[head])
                 continue
-            # one decode iteration for all active slots
+            # one fused chunk of decode iterations for all active slots
             b = len(remaining)
-            t += self.clock.decode_step_time(b)
+            rem = list(remaining.values())
+            steps = min(self.chunk, min(rem) if head < n else max(rem))
+            steps = max(int(steps), 1)
+            dt_step = self.clock.decode_step_time(b)
             done = []
             for rid in list(remaining):
-                remaining[rid] -= 1
-                if remaining[rid] <= 0:
-                    e2e[rid] = t - arr[rid]
+                if remaining[rid] <= steps:
+                    # completes mid-chunk; the real engine interpolates the
+                    # same way from the scan's per-step active mask
+                    e2e[rid] = t + remaining[rid] * dt_step - arr[rid]
                     done.append(rid)
+                else:
+                    remaining[rid] -= steps
+            t += steps * dt_step
             for rid in done:
                 del remaining[rid]
         return ScheduleResult(waits, e2e, np.zeros(n, bool), [], t)

@@ -1,0 +1,95 @@
+"""Fast (vectorized / lax.scan) simulators vs the NumPy reference oracle.
+
+Both implementations sample with the same rng call order, so equal seeds
+must give matching trajectories — means/p95s agree to float-rounding, not
+just statistically."""
+
+import numpy as np
+import pytest
+
+from repro.core.distributions import LogNormalTokens, UniformTokens
+from repro.core.fastsim import (
+    simulate_dynamic_batching_fast, simulate_fixed_batching_fast,
+    simulate_mg1_fast, simulate_policy_sweep_fast)
+from repro.core.latency_model import (
+    BatchLatencyModel, PAPER_A100_LLAMA2_7B)
+from repro.core.simulate import (
+    simulate_dynamic_batching, simulate_fixed_batching, simulate_mg1,
+    simulate_policy_sweep)
+
+UNI = UniformTokens(1000)
+LN = LogNormalTokens(7.0, 0.7)
+LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+N = 40_000
+TOL = 1e-6
+
+
+def _close(a, b, tol=TOL):
+    assert abs(a - b) <= tol * max(1.0, abs(a), abs(b)), (a, b)
+
+
+def test_mg1_no_impatience_identical():
+    r = simulate_mg1(0.02, LN, PAPER_A100_LLAMA2_7B, n_max=1600,
+                     num_requests=N, seed=3)
+    f = simulate_mg1_fast(0.02, LN, PAPER_A100_LLAMA2_7B, n_max=1600,
+                          num_requests=N, seed=3)
+    np.testing.assert_allclose(f["waits"], r["waits"], rtol=1e-9)
+
+
+@pytest.mark.parametrize("tau", [30.0, 120.0])
+def test_mg1_impatience_matches_reference(tau):
+    kw = dict(n_max=1600, tau=tau, num_requests=N, seed=3)
+    r = simulate_mg1(1 / 40, LN, PAPER_A100_LLAMA2_7B, **kw)
+    f = simulate_mg1_fast(1 / 40, LN, PAPER_A100_LLAMA2_7B, **kw)
+    _close(r["mean_wait"], f["mean_wait"])
+    _close(r["p95_wait"], f["p95_wait"])
+    _close(r["loss_frac"], f["loss_frac"])
+    _close(r["mean_wait_served"], f["mean_wait_served"])
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(elastic=True),
+    dict(b_max=8),
+    dict(elastic=True, b_max=4),
+    dict(n_max=500),
+])
+def test_dynamic_batching_matches_reference(kw):
+    r = simulate_dynamic_batching(0.2, UNI, LAT, num_requests=N, seed=3, **kw)
+    f = simulate_dynamic_batching_fast(0.2, UNI, LAT, num_requests=N,
+                                       seed=3, **kw)
+    _close(r["mean_wait"], f["mean_wait"])
+    _close(r["p95_wait"], f["p95_wait"])
+    _close(r["mean_batch"], f["mean_batch"])
+
+
+@pytest.mark.parametrize("b", [4, 16])
+def test_fixed_batching_matches_reference(b):
+    r = simulate_fixed_batching(0.3, b, UNI, LAT, num_requests=N, seed=5)
+    f = simulate_fixed_batching_fast(0.3, b, UNI, LAT, num_requests=N, seed=5)
+    _close(r["mean_wait"], f["mean_wait"])
+    _close(r["p95_wait"], f["p95_wait"])
+
+
+def test_fixed_batching_custom_batch_time_delegates():
+    bt = lambda ns: 1.0 + 0.01 * float(np.max(ns))
+    r = simulate_fixed_batching(0.3, 4, UNI, batch_time=bt,
+                                num_requests=8_000, seed=1)
+    f = simulate_fixed_batching_fast(0.3, 4, UNI, batch_time=bt,
+                                     num_requests=8_000, seed=1)
+    _close(r["mean_wait"], f["mean_wait"])
+
+
+def test_policy_sweep_matches_reference():
+    policies = {
+        "dyn": dict(kind="dynamic"),
+        "dyn8": dict(kind="dynamic", b_max=8),
+        "ela": dict(kind="elastic"),
+        "fix4": dict(kind="fixed", b=4),
+    }
+    r = simulate_policy_sweep([0.1, 0.4], UNI, LAT, policies,
+                              num_requests=20_000, seed=0)
+    f = simulate_policy_sweep_fast([0.1, 0.4], UNI, LAT, policies,
+                                   num_requests=20_000, seed=0)
+    for name in policies:
+        np.testing.assert_allclose(f[name], r[name], rtol=TOL)

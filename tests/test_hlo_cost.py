@@ -13,6 +13,15 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()
 
 
+def _xla_flops(compiled) -> float:
+    """compiled.cost_analysis() returns a dict in older jax and a list of
+    per-partition dicts in newer releases — normalize to total flops."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, dict):
+        return float(ca["flops"])
+    return float(sum(d.get("flops", 0.0) for d in ca))
+
+
 def test_scan_flops_match_unrolled():
     n, steps = 64, 10
 
@@ -35,7 +44,7 @@ def test_scan_flops_match_unrolled():
     assert abs(ps.flops - truth) / truth < 0.01
     assert abs(pu.flops - truth) / truth < 0.01
     # XLA's own analysis undercounts the scan (documents why we parse):
-    assert cs.cost_analysis()["flops"] < truth / 2
+    assert _xla_flops(cs) < truth / 2
 
 
 def test_nested_scan_flops():
@@ -65,8 +74,8 @@ def test_unrolled_flops_match_cost_analysis():
     b = jnp.ones((256, 64), jnp.float32)
     c = _compile(f, a, b)
     mine = analyze_hlo_text(c.as_text())
-    theirs = c.cost_analysis()
-    assert abs(mine.flops - theirs["flops"]) / theirs["flops"] < 0.2
+    theirs = _xla_flops(c)
+    assert abs(mine.flops - theirs) / theirs < 0.2
 
 
 def test_dynamic_slice_bytes_not_full_operand():
