@@ -1,21 +1,33 @@
-"""Paper Fig 5: mean queueing delay of dynamic vs elastic batching over
-arrival rate (uniform(0,1000) outputs), with the Inoue-style upper bound
-(Eq 16 via the Eq 20/26 linearizations). Also runs the policies end-to-end
-through the serving schedulers (same virtual-timeline discipline the real
-engine uses) — analytic bound vs simulation vs scheduler must agree.
+"""Paper Fig 5 + the policy registry, end-to-end.
 
-The λ-grid itself runs on the vectorized fast simulators (one vmapped
-per-request scan over every (λ, policy) lane — repro.core.fastsim); a
-reference-vs-fast timing section at 200k requests records the speedup to
-``benchmarks/BENCH_simulators.json`` so the perf trajectory is tracked in
-git. The NumPy reference loops stay the cross-checked oracle: the bench
-asserts fast == reference on one (λ, policy) cell every run."""
+Three jobs since the batching-policy refactor:
+
+1. **Registry coverage** (CI gate): every policy registered in
+   ``repro.core.policies`` must run end-to-end through the fast simulator
+   AND the scheduler adapter — ``registry_coverage()`` raises if any
+   discipline broke, and the GitHub Actions benchmark step fails with it.
+2. **Fig 5**: mean queueing delay of dynamic vs elastic batching over
+   arrival rate (uniform(0,1000) outputs) with the Inoue-style upper bound
+   (Eq 16 via the Eq 20/26 linearizations), all through the uniform
+   ``fastsim.sweep`` entry point; the NumPy oracle cross-checks one cell
+   per run and the ref-vs-fast timing extends ``BENCH_simulators.json``
+   (keyed runs — earlier PRs' numbers stay in the file).
+3. **Multi-bin batching** (Guldogan et al. 2024): delay vs dynamic /
+   capped-dynamic / elastic under the paper's heavy-tail workload
+   (lognormal(7, 0.7), Fig-6b latency constants) where max-token padding
+   dominates — the regime multi-bin was designed for."""
 
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import numpy as np
+
+if __package__ in (None, ""):          # direct `python bench_....py` run
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.common import emit, emit_bench, timer
 
@@ -34,25 +46,61 @@ def _time_reference_loops(lams, uni, lat, n_req):
 
 
 def _time_fast_sweep(lams, uni, lat, n_req):
-    from repro.core.fastsim import simulate_policy_sweep_fast
-    policies = {"dyn": dict(kind="dynamic"), "ela": dict(kind="elastic")}
+    from repro.core.fastsim import sweep
+    from repro.core.policies import DynamicPolicy, ElasticPolicy
+    policies = {"dyn": DynamicPolicy(), "ela": ElasticPolicy()}
     # cold call includes XLA compile; the warm call is the steady-state
     # throughput every later sweep in the process enjoys
     t0 = time.perf_counter()
-    res = simulate_policy_sweep_fast(lams, uni, lat, policies,
-                                     num_requests=n_req, seed=3)
+    res = sweep(policies, lams, uni, lat, num_requests=n_req, seed=3)
     t_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    res = simulate_policy_sweep_fast(lams, uni, lat, policies,
-                                     num_requests=n_req, seed=3)
+    res = sweep(policies, lams, uni, lat, num_requests=n_req, seed=3)
     t_warm = time.perf_counter() - t0
     return res, t_cold, t_warm
 
 
+def registry_coverage(n_req: int = 4_000) -> dict:
+    """Run EVERY registered policy end-to-end (fast simulator + scheduler
+    adapter) on a small workload; raise if any discipline broke.  The CI
+    benchmark step calls this, so a policy that stops running fails the
+    build."""
+    from repro.core.distributions import UniformTokens
+    from repro.core.fastsim import simulate_policy_fast
+    from repro.core.latency_model import BatchLatencyModel, LatencyModel
+    from repro.core.policies import REGISTRY, default_policies
+    from repro.data.pipeline import make_request_stream
+    from repro.serving.metrics import summarize
+    from repro.serving.scheduler import ModelClock
+
+    uni = UniformTokens(1000)
+    lat = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+    clock = ModelClock(LatencyModel(0.0212, 1.79), lat)
+    reqs = make_request_stream(min(n_req, 4_000), lam=0.2, dist=uni,
+                               vocab=100, seed=3)
+    policies = default_policies()
+    missing = set(REGISTRY) - {type(p).name for p in policies.values()}
+    assert not missing, f"default_policies() misses registered: {missing}"
+    out = {}
+    for name, pol in policies.items():
+        sim = simulate_policy_fast(pol, 0.2, uni, lat,
+                                   num_requests=n_req, seed=3)
+        sch = summarize(pol.scheduler(clock).run(reqs))
+        assert np.isfinite(sim["mean_wait"]), (name, "fast sim")
+        assert np.isfinite(sch["mean_wait"]), (name, "scheduler")
+        ana = pol.analytic_delay(0.2, uni, lat)
+        out[name] = {"sim": sim["mean_wait"], "sched": sch["mean_wait"],
+                     "analytic": ana}
+    return out
+
+
 def main(quick: bool = False):
     from repro.core.bulk import dynamic_batching_bound, elastic_batching_bound
-    from repro.core.distributions import UniformTokens
+    from repro.core.distributions import LogNormalTokens, UniformTokens
+    from repro.core.fastsim import sweep
     from repro.core.latency_model import BatchLatencyModel, LatencyModel
+    from repro.core.policies import (
+        DynamicPolicy, ElasticPolicy, MultiBinPolicy)
     from repro.data.pipeline import make_request_stream
     from repro.serving.metrics import summarize
     from repro.serving.scheduler import (
@@ -67,6 +115,10 @@ def main(quick: bool = False):
     derived = {}
     gaps = []
     with timer() as t_all:
+        # ------ registry coverage (CI gate: every policy end-to-end) ------
+        cov = registry_coverage()
+        derived["registry_policies"] = ",".join(sorted(cov))
+
         # ------ ref-vs-fast perf record (acceptance: fast >= 10x ref) ------
         # always at 200k requests; quick/CI mode trims the lambda grid so
         # the reference-loop half doesn't dominate the quick run
@@ -89,17 +141,14 @@ def main(quick: bool = False):
             "fast_sweep_warm_s": t_warm,
             "speedup_cold": t_ref / t_cold,
             "speedup_warm": t_ref / t_warm,
-        })
+        }, key="pr2_policy_core")
 
         # ------ Fig 5 grid on the fast path (oracle-checked above) ------
         if n_req == n_perf and perf_lams == lams:
             grid = fast_waits
         else:
-            from repro.core.fastsim import simulate_policy_sweep_fast
-            grid = simulate_policy_sweep_fast(
-                lams, uni, lat,
-                {"dyn": dict(kind="dynamic"), "ela": dict(kind="elastic")},
-                num_requests=n_req, seed=3)
+            grid = sweep({"dyn": DynamicPolicy(), "ela": ElasticPolicy()},
+                         lams, uni, lat, num_requests=n_req, seed=3)
         for li, lam in enumerate(lams):
             d_mean = float(grid["dyn"][li])
             e_mean = float(grid["ela"][li])
@@ -114,6 +163,29 @@ def main(quick: bool = False):
         derived["elastic_advantage_grows_with_lam"] = bool(
             gaps[-1] > gaps[0])
 
+        # ------ multi-bin batching vs dynamic/elastic (heavy tail) ------
+        # lognormal(7,0.7) + Fig-6b constants: max-token padding dominates,
+        # unbounded dynamic batching runs away at high load, and binning by
+        # output length recovers most of elastic's win without early exits
+        ln = LogNormalTokens(7.0, 0.7)
+        ht = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+        mb_pols = {"dyn": DynamicPolicy(), "dyn_b32": DynamicPolicy(b_max=32),
+                   "ela": ElasticPolicy(),
+                   "multibin4": MultiBinPolicy(num_bins=4)}
+        mb_lams = [0.5, 1.0]
+        mb = sweep(mb_pols, mb_lams, ln, ht,
+                   num_requests=30_000 if quick else 60_000, seed=15)
+        for li, lam in enumerate(mb_lams):
+            for name in mb_pols:
+                derived[f"{name}_ht_lam{lam}"] = float(mb[name][li])
+        # the Guldogan et al. effect: at high load multi-bin crushes padded
+        # dynamic batching (bounded or not) and approaches elastic
+        hi = len(mb_lams) - 1
+        assert mb["multibin4"][hi] < 0.1 * mb["dyn"][hi]
+        assert mb["multibin4"][hi] < 0.1 * mb["dyn_b32"][hi]
+        derived["multibin_vs_elastic_ht_hi"] = float(
+            mb["multibin4"][hi] / mb["ela"][hi])
+
         # scheduler cross-check at lam=0.2
         reqs = make_request_stream(min(n_req, 60_000), lam=0.2, dist=uni,
                                    vocab=100, seed=3)
@@ -127,4 +199,4 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    main(quick=os.environ.get("REPRO_BENCH_QUICK", "0") == "1")

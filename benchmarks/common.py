@@ -12,14 +12,30 @@ RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
 
-def emit_bench(name: str, payload: dict) -> str:
+def emit_bench(name: str, payload: dict, key: str = None) -> str:
     """Write a tracked perf record to benchmarks/BENCH_<name>.json.
 
     Unlike ``emit`` (results/ scratch dir), these files are committed so the
     seed-vs-PR perf trajectory is reviewable in git history. Callers should
     include the timing baseline being compared against (e.g. the reference
-    simulator loops, per-step decode) and the measured speedup."""
+    simulator loops, per-step decode) and the measured speedup.
+
+    With ``key`` the record EXTENDS the existing file instead of replacing
+    it: the file becomes a {run_label: payload} map and only ``key`` is
+    updated, so earlier PRs' baselines stay reviewable in the same file."""
     path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    if key is not None:
+        record = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                existing = json.load(f)
+            if existing and all(isinstance(v, dict)
+                                for v in existing.values()):
+                record = existing                      # already a keyed map
+            else:
+                record = {"pr1_baseline": existing}    # migrate legacy flat
+        record[key] = payload
+        payload = record
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float, sort_keys=True)
         f.write("\n")

@@ -1,42 +1,51 @@
-"""Vectorized / ``lax.scan`` simulation core (fast path for §V validation).
+"""Compiled simulation kernels behind the batching-policy core (fast §V).
 
 The NumPy event loops in :mod:`repro.core.simulate` stay the *reference
-oracle*; this module re-derives each of them as a compiled recursion so the
-λ-grid sweeps behind Figs 4-6 and policy search run 10-100x faster:
+oracle*; this module re-derives them as compiled recursions so λ-grid
+sweeps and policy search run 10-100x faster.  Dispatch is structural: every
+:class:`repro.core.policies.BatchPolicy` names its kernel via
+``policy.fast_kernel`` and the ``KERNELS`` table maps that name to an
+implementation — policies without a compiled twin fall back to the oracle:
 
-  * ``simulate_mg1_fast``       — Lindley / workload recursion. tau=None is
-    the same closed-form cumulative-minimum as the reference; the impatience
-    path becomes a ``lax.scan`` over the workload process (admit iff V < tau).
-  * ``simulate_dynamic_batching_fast`` — the batch-formation event loop is
-    replaced by a *per-request* scan with O(1) carry: a forming batch is fully
-    described by (start time, count, token sum, token max), and a request
-    either joins the forming batch (arrival <= start) or closes it, which
-    advances the server-free time by the padded Eq-18 / elastic Eq-26 batch
-    time. One scan step per request, no searchsorted, no gathers — and the
-    recursion is ``vmap``-able across (λ, policy) lanes.
-  * ``simulate_fixed_batching_fast`` — fully closed form: with per-batch
-    times H_k and last-arrivals A_k, the free-time recursion
-    F_k = max(F_{k-1}, A_k) + H_k telescopes to a running maximum,
-    F_k = cummax_j(A_j - C_{j-1}) + C_k with C = cumsum(H). Pure NumPy.
-  * ``simulate_policy_sweep_fast`` — stacks every (λ, dynamic/elastic policy)
-    combination into lanes of ONE vmapped scan (fixed-b policies use the
-    closed form), so the whole grid costs a single compiled pass.
+  * ``"mg1"``          — Lindley / workload recursion.  tau=None is the
+    same closed-form cumulative-minimum as the reference; the impatience
+    path becomes a ``lax.scan`` over the workload process (admit iff
+    V < tau).
+  * ``"batch_scan"``   — dynamic/elastic batch formation as a *per-request*
+    scan with O(1) carry (start, count, token sum, token max); one scan
+    step per request, ``vmap``-able across (λ, policy) lanes.
+  * ``"fixed_cummax"`` — fully closed form: the free-time recursion
+    F_k = max(F_{k-1}, A_k) + H_k telescopes to a running maximum.
+  * ``"multibin"``     — per-bin FIFO queues + one shared server as a
+    jitted ``lax.while_loop`` over batch events: per-bin head pointers,
+    vmapped ``searchsorted`` for the waiting count, and a sparse-table
+    (power-of-two window) range-max for the batch's padded token length.
+    One iteration per BATCH, so high-load sweeps cost far fewer steps than
+    requests.
+
+``sweep(policies, lam_grid, ...)`` is the uniform entry point: every
+(λ, policy) combination whose policy rides the shared ``batch_scan``
+kernel becomes a lane of ONE vmapped scan; the remaining policies dispatch
+through ``KERNELS`` per cell.  ``simulate_policy_fast`` is the single-cell
+twin.  Legacy entry points (``simulate_mg1_fast``, ...) wrap the same
+kernels and keep their pre-refactor signatures.
 
 All absolute-time arithmetic runs under ``jax.experimental.enable_x64`` —
 simulated clocks reach ~1e6 seconds where float32 ULP (~0.25 s) would swamp
-the waits being measured. Scans run with ``unroll=8``, which amortizes XLA's
-per-iteration loop overhead on CPU (~5x over unroll=1) while keeping compile
-time sub-second.
+the waits being measured.  Scans run with ``unroll=8``, which amortizes
+XLA's per-iteration loop overhead on CPU while keeping compile time
+sub-second.
 
-Every function samples its workload with the *same* rng call order as its
-reference twin, so equal seeds give trajectory-level (not just moment-level)
-agreement; ``tests/test_fastsim.py`` pins this down.
+Every kernel samples its workload through the policy's ``sample_workload``
+— the *same* rng call order as the reference oracle — so equal seeds give
+trajectory-level (not just moment-level) agreement; ``tests/test_fastsim.py``
+and ``tests/test_policies.py`` pin this down.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -46,12 +55,40 @@ from jax import lax
 
 from repro.core.distributions import TokenDistribution
 from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policies import (
+    BatchPolicy, DynamicPolicy, ElasticPolicy, FCFSPolicy, FixedPolicy,
+    policy_from_spec, single_from_batch)
 from repro.core.simulate import (
-    _warm, simulate_fixed_batching, simulate_mg1)
+    _warm, simulate_fixed_batching, simulate_policy)
 
 _UNROLL = 8          # scan body replication (amortizes loop overhead on CPU)
 _NEG = -1e30
 _NO_CAP = 1e18       # "b_max=None" as a finite cap (inf would poison carries)
+
+KERNELS: Dict[str, Callable] = {}
+
+
+def kernel(name: str):
+    """Register a compiled kernel; ``BatchPolicy.fast_kernel`` names it."""
+    def deco(fn):
+        KERNELS[name] = fn
+        return fn
+    return deco
+
+
+def simulate_policy_fast(policy: BatchPolicy, lam: float,
+                         dist: Optional[TokenDistribution], lat,
+                         num_requests: int = 200_000, seed: int = 0) -> dict:
+    """Fast twin of :func:`repro.core.simulate.simulate_policy`: dispatch to
+    the policy's compiled kernel, or fall back to the oracle when the
+    policy has none (``fast_kernel=None``)."""
+    if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
+        lat = single_from_batch(lat)
+    if policy.fast_kernel is None:
+        return simulate_policy(policy, lam, dist, lat,
+                               num_requests=num_requests, seed=seed)
+    return KERNELS[policy.fast_kernel](policy, lam, dist, lat,
+                                       num_requests, seed)
 
 
 # ----------------------------------------------------------------------------
@@ -76,26 +113,20 @@ def _impatience_scan():
     return jax.jit(run)
 
 
-def simulate_mg1_fast(lam: float, dist: TokenDistribution, lat: LatencyModel,
-                      n_max: Optional[int] = None, tau: Optional[float] = None,
-                      num_requests: int = 200_000, seed: int = 0) -> dict:
-    """Drop-in fast twin of :func:`repro.core.simulate.simulate_mg1`."""
-    if tau is None:
+@kernel("mg1")
+def _mg1_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+    if policy.tau is None:
         # the reference tau=None path is already a closed-form vectorized
-        # Lindley recursion — reuse it verbatim (it IS the fast path).
-        return simulate_mg1(lam, dist, lat, n_max=n_max, tau=None,
-                            num_requests=num_requests, seed=seed)
-    rng = np.random.default_rng(seed)
-    inter = rng.exponential(1.0 / lam, num_requests)
-    tokens = dist.sample(rng, num_requests)
-    if n_max is not None:
-        tokens = np.minimum(tokens, n_max)
-    service = lat.service_time(tokens)
+        # Lindley recursion — it IS the fast path.
+        return simulate_policy(policy, lam, dist, lat,
+                               num_requests=num_requests, seed=seed)
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    service = lat.service_time(wl.tokens)
     with jax.experimental.enable_x64():
         waits, lost = _impatience_scan()(
-            jnp.asarray(inter, jnp.float64),
+            jnp.asarray(wl.inter, jnp.float64),
             jnp.asarray(np.asarray(service, np.float64), jnp.float64),
-            jnp.float64(tau))
+            jnp.float64(policy.tau))
         waits = np.asarray(waits)
         lost = np.asarray(lost)
     waits_w, lost_w = _warm(waits), _warm(lost)
@@ -107,6 +138,14 @@ def simulate_mg1_fast(lam: float, dist: TokenDistribution, lat: LatencyModel,
         "p95_wait": float(np.percentile(waits_w, 95)),
         "waits": waits_w,
     }
+
+
+def simulate_mg1_fast(lam: float, dist: TokenDistribution, lat: LatencyModel,
+                      n_max: Optional[int] = None, tau: Optional[float] = None,
+                      num_requests: int = 200_000, seed: int = 0) -> dict:
+    """Drop-in fast twin of :func:`repro.core.simulate.simulate_mg1`."""
+    return simulate_policy_fast(FCFSPolicy(n_max=n_max, tau=tau), lam, dist,
+                                lat, num_requests=num_requests, seed=seed)
 
 
 # ----------------------------------------------------------------------------
@@ -162,6 +201,21 @@ def _batch_lane_stats(starts, closed, arrivals):
     }
 
 
+@kernel("batch_scan")
+def _batch_scan_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+    elastic, b_max = policy.scan_lane()
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    with jax.experimental.enable_x64():
+        starts, closed = _batching_scan(False)(
+            jnp.asarray(wl.arrivals, jnp.float64),
+            jnp.asarray(wl.tokens, jnp.float64),
+            jnp.float64(lat.k1), jnp.float64(lat.k2),
+            jnp.float64(lat.k3), jnp.float64(lat.k4),
+            jnp.asarray(bool(elastic)),
+            jnp.float64(b_max if b_max is not None else _NO_CAP))
+        return _batch_lane_stats(starts, closed, wl.arrivals)
+
+
 def simulate_dynamic_batching_fast(lam: float, dist: TokenDistribution,
                                    lat: BatchLatencyModel,
                                    b_max: Optional[int] = None,
@@ -171,47 +225,25 @@ def simulate_dynamic_batching_fast(lam: float, dist: TokenDistribution,
                                    seed: int = 0) -> dict:
     """Drop-in fast twin of simulate_dynamic_batching (same seeds =>
     trajectory-identical batch boundaries up to float rounding)."""
-    rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / lam, num_requests))
-    tokens = dist.sample(rng, num_requests).astype(np.float64)
-    if n_max is not None:
-        tokens = np.minimum(tokens, n_max)
-    with jax.experimental.enable_x64():
-        starts, closed = _batching_scan(False)(
-            jnp.asarray(arrivals, jnp.float64),
-            jnp.asarray(tokens, jnp.float64),
-            jnp.float64(lat.k1), jnp.float64(lat.k2),
-            jnp.float64(lat.k3), jnp.float64(lat.k4),
-            jnp.asarray(bool(elastic)),
-            jnp.float64(b_max if b_max is not None else _NO_CAP))
-        return _batch_lane_stats(starts, closed, arrivals)
+    cls = ElasticPolicy if elastic else DynamicPolicy
+    return simulate_policy_fast(cls(n_max=n_max, b_max=b_max), lam, dist,
+                                lat, num_requests=num_requests, seed=seed)
 
 
 # ----------------------------------------------------------------------------
 # Fixed batching (closed form — the recursion telescopes to a cummax)
 # ----------------------------------------------------------------------------
 
-def simulate_fixed_batching_fast(lam: float, b: int,
-                                 dist: Optional[TokenDistribution],
-                                 lat: Optional[BatchLatencyModel] = None,
-                                 batch_time: Optional[Callable] = None,
-                                 num_requests: int = 200_000,
-                                 seed: int = 0) -> dict:
-    """Drop-in fast twin of simulate_fixed_batching. With an arbitrary
-    ``batch_time`` callable the per-batch times cannot be vectorized, so that
-    case delegates to the reference loop."""
-    if batch_time is not None:
-        return simulate_fixed_batching(lam, b, dist, lat,
-                                       batch_time=batch_time,
-                                       num_requests=num_requests, seed=seed)
-    assert lat is not None
-    rng = np.random.default_rng(seed)
-    num_requests = (num_requests // b) * b
-    arrivals = np.cumsum(rng.exponential(1.0 / lam, num_requests))
-    if dist is not None:
-        tokens = dist.sample(rng, num_requests).astype(np.float64)
-    else:
-        tokens = np.zeros(num_requests)
+@kernel("fixed_cummax")
+def _fixed_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+    if "batch_time" in vars(policy):
+        # an instance-level batch_time override cannot be vectorized:
+        # delegate to the reference loop (same trajectory by construction)
+        return simulate_policy(policy, lam, dist, lat,
+                               num_requests=num_requests, seed=seed)
+    b = policy.b
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    arrivals, tokens = wl.arrivals, wl.tokens
     arr_kb = arrivals.reshape(-1, b)
     h = np.asarray(lat.batch_time(b, tokens.reshape(-1, b).max(axis=1)),
                    np.float64)
@@ -228,38 +260,167 @@ def simulate_fixed_batching_fast(lam: float, b: int,
     }
 
 
+def simulate_fixed_batching_fast(lam: float, b: int,
+                                 dist: Optional[TokenDistribution],
+                                 lat: Optional[BatchLatencyModel] = None,
+                                 batch_time: Optional[Callable] = None,
+                                 num_requests: int = 200_000,
+                                 seed: int = 0) -> dict:
+    """Drop-in fast twin of simulate_fixed_batching. With an arbitrary
+    ``batch_time`` callable the per-batch times cannot be vectorized, so that
+    case delegates to the reference loop."""
+    if batch_time is not None:
+        return simulate_fixed_batching(lam, b, dist, lat,
+                                       batch_time=batch_time,
+                                       num_requests=num_requests, seed=seed)
+    assert lat is not None
+    return simulate_policy_fast(FixedPolicy(b=b), lam, dist, lat,
+                                num_requests=num_requests, seed=seed)
+
+
 # ----------------------------------------------------------------------------
-# Policy sweep: one vmapped scan over every (λ, dynamic/elastic) lane
+# Multi-bin batching (jitted while_loop over batch events)
 # ----------------------------------------------------------------------------
 
-def simulate_policy_sweep_fast(lam_grid, dist, lat, policies: dict,
-                               num_requests: int = 100_000,
-                               seed: int = 0) -> dict:
-    """Drop-in fast twin of simulate_policy_sweep. All dynamic/elastic
-    (λ, policy) combinations run as lanes of a single vmapped per-request
-    scan; fixed-b policies use the closed-form recursion per λ."""
+@functools.lru_cache(maxsize=None)
+def _multibin_loop(B: int, L: int, K: int, M: int):
+    """One iteration per BATCH: pick the non-empty bin with the earliest
+    head arrival, count its waiting requests (vmapped searchsorted), pad
+    the batch to its token range-max (sparse table), advance the server."""
+
+    def run(arr_b, table, lens, k1, k2, k3, k4, b_max):
+        def cond(c):
+            return jnp.any(c[1] < lens)
+
+        def row_search_right(j, v):
+            # first index i in (sorted, inf-padded) row j with arr_b[j,i] > v
+            def step(_, lohi):
+                lo, hi = lohi
+                mid = (lo + hi) // 2
+                live = lo < hi
+                right = live & (arr_b[j, mid] <= v)
+                return (jnp.where(right, mid + 1, lo),
+                        jnp.where(live & ~right, mid, hi))
+            lo, _ = lax.fori_loop(0, L.bit_length() + 1, step,
+                                  (jnp.int32(0), jnp.int32(L)))
+            return lo
+
+        def body(c):
+            t_free, heads, nb, o_bin, o_lo, o_hi, o_start = c
+            a_head = arr_b[jnp.arange(B), jnp.minimum(heads, L - 1)]
+            a_head = jnp.where(heads < lens, a_head, jnp.inf)
+            j = jnp.argmin(a_head).astype(jnp.int32)
+            a = a_head[j]
+            lo = heads[j]
+            idle = a >= t_free
+            hi_busy = jnp.minimum(row_search_right(j, t_free),
+                                  jnp.minimum(lo + b_max, lens[j]))
+            hi = jnp.where(idle, lo + 1, hi_busy)
+            start = jnp.where(idle, a, t_free)
+            m = hi - lo
+            k = jnp.floor(jnp.log2(m.astype(jnp.float64))).astype(jnp.int32)
+            p = jnp.left_shift(jnp.int32(1), k)
+            rm = jnp.maximum(table[k, j, lo], table[k, j, hi - p])
+            bf = m.astype(jnp.float64)
+            h = k1 * bf + k2 + (k3 * bf + k4) * rm
+            return (start + h, heads.at[j].set(hi), nb + 1,
+                    o_bin.at[nb].set(j), o_lo.at[nb].set(lo),
+                    o_hi.at[nb].set(hi), o_start.at[nb].set(start))
+
+        init = (jnp.float64(0.0), jnp.zeros(B, jnp.int32), jnp.int32(0),
+                jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32),
+                jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.float64))
+        t_free, heads, nb, o_bin, o_lo, o_hi, o_start = lax.while_loop(
+            cond, body, init)
+        return nb, o_bin, o_lo, o_hi, o_start
+
+    return jax.jit(run)
+
+
+@kernel("multibin")
+def _multibin_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    arr, tok = wl.arrivals, wl.tokens
+    n = len(arr)
+    bins = policy.bin_of(tok, dist)
+    B = policy.num_bins
+    members = [np.nonzero(bins == j)[0] for j in range(B)]
+    lens = np.array([len(m) for m in members], np.int32)
+    L = max(1 << int(lens.max() - 1).bit_length(), 2)   # pow2-bucketed rows
+    arr_b = np.full((B, L), np.inf)
+    tok_b = np.full((B, L), -np.inf)
+    for j, mem in enumerate(members):
+        arr_b[j, :lens[j]] = arr[mem]
+        tok_b[j, :lens[j]] = tok[mem]
+    # sparse table: table[k, j, i] = max tok over window [i, i + 2^k)
+    K = int(np.log2(L)) + 1
+    table = np.empty((K, B, L))
+    table[0] = tok_b
+    for k in range(1, K):
+        s = 1 << (k - 1)
+        table[k, :, :L - s] = np.maximum(table[k - 1, :, :L - s],
+                                         table[k - 1, :, s:])
+        table[k, :, L - s:] = table[k - 1, :, L - s:]
+    b_max = np.int32(policy.b_max if policy.b_max is not None else L)
+    with jax.experimental.enable_x64():
+        nb, o_bin, o_lo, o_hi, o_start = _multibin_loop(B, L, K, n)(
+            jnp.asarray(arr_b, jnp.float64), jnp.asarray(table, jnp.float64),
+            jnp.asarray(lens, jnp.int32),
+            jnp.float64(lat.k1), jnp.float64(lat.k2),
+            jnp.float64(lat.k3), jnp.float64(lat.k4), b_max)
+        nb = int(nb)
+        o_bin = np.asarray(o_bin)[:nb]
+        o_lo = np.asarray(o_lo)[:nb]
+        o_hi = np.asarray(o_hi)[:nb]
+        o_start = np.asarray(o_start)[:nb]
+    starts_req = np.empty(n)
+    for j, mem in enumerate(members):
+        sel = o_bin == j
+        starts_req[mem] = np.repeat(o_start[sel], (o_hi - o_lo)[sel])
+    waits = starts_req - arr
+    w = _warm(waits)
+    return {
+        "mean_wait": float(w.mean()),
+        "p95_wait": float(np.percentile(w, 95)),
+        "mean_batch": float(n / max(nb, 1)),
+        "waits": w,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Uniform sweep: one vmapped scan for every batch_scan lane, kernels for rest
+# ----------------------------------------------------------------------------
+
+def sweep(policies: dict, lam_grid, dist, lat,
+          num_requests: int = 100_000, seed: int = 0) -> dict:
+    """Mean wait for each policy over an arrival-rate grid — the uniform
+    fast entry point.  ``policies``: name -> BatchPolicy (or legacy spec
+    dict).  Policies riding the shared per-request batching scan
+    (``scan_lane() is not None``) are stacked as lanes of ONE vmapped scan;
+    every other policy dispatches through ``KERNELS`` per (λ, policy) cell
+    (falling back to the oracle when it has no compiled kernel)."""
     lam_grid = list(lam_grid)
+    insts = {name: (p if isinstance(p, BatchPolicy) else policy_from_spec(p))
+             for name, p in policies.items()}
     lanes = []          # (name, lam_idx, elastic, b_max)
-    out = {name: [None] * len(lam_grid) for name in policies}
-    for name, spec in policies.items():
-        kind = spec.get("kind")
-        if kind not in ("dynamic", "elastic", "fixed"):
-            raise ValueError(kind)
-        if kind == "fixed":
-            for li, lam in enumerate(lam_grid):
-                r = simulate_fixed_batching_fast(
-                    lam, spec["b"], dist, lat,
-                    num_requests=num_requests, seed=seed)
-                out[name][li] = r["mean_wait"]
-        else:
+    out = {name: [None] * len(lam_grid) for name in insts}
+    for name, pol in insts.items():
+        lane = pol.scan_lane()
+        if lane is not None and pol.n_max is None:
             for li in range(len(lam_grid)):
-                lanes.append((name, li, kind == "elastic", spec.get("b_max")))
+                lanes.append((name, li) + lane)
+        else:
+            for li, lam in enumerate(lam_grid):
+                r = simulate_policy_fast(pol, lam, dist, lat,
+                                         num_requests=num_requests, seed=seed)
+                out[name][li] = r["mean_wait"]
     if lanes:
         arrs, toks = [], []
         for lam in lam_grid:
-            rng = np.random.default_rng(seed)
-            arrs.append(np.cumsum(rng.exponential(1.0 / lam, num_requests)))
-            toks.append(dist.sample(rng, num_requests).astype(np.float64))
+            wl = DynamicPolicy().sample_workload(lam, dist, num_requests,
+                                                 seed)
+            arrs.append(wl.arrivals)
+            toks.append(wl.tokens)
         arr_l = np.stack([arrs[li] for _, li, _, _ in lanes])
         tok_l = np.stack([toks[li] for _, li, _, _ in lanes])
         elas = np.array([e for _, _, e, _ in lanes])
@@ -278,3 +439,11 @@ def simulate_policy_sweep_fast(lam_grid, dist, lat, policies: dict,
             stats = _batch_lane_stats(starts[row], closed[row], arrs[li])
             out[name][li] = stats["mean_wait"]
     return {k: np.asarray(v) for k, v in out.items()}
+
+
+def simulate_policy_sweep_fast(lam_grid, dist, lat, policies: dict,
+                               num_requests: int = 100_000,
+                               seed: int = 0) -> dict:
+    """Drop-in fast twin of simulate_policy_sweep (legacy argument order)."""
+    return sweep(policies, lam_grid, dist, lat,
+                 num_requests=num_requests, seed=seed)

@@ -1,0 +1,536 @@
+"""Unified batching-policy core: every serving discipline defined ONCE.
+
+The paper analyses four serving disciplines (M/G/1 FCFS with max-token
+clipping, dynamic, fixed and elastic batching); this repo additionally runs
+iteration-level continuous batching and multi-bin batching.  Before this
+module each discipline was re-implemented three to four times — analytic
+formulas (``mg1``/``bulk``), the NumPy reference oracle (``simulate``), the
+compiled fast simulators (``fastsim``) and the virtual-timeline schedulers
+(``serving.scheduler``).  ``BatchPolicy`` collapses those rewrites into one
+definition per discipline:
+
+  * **workload law** — ``sample_workload`` fixes the rng call order
+    (arrivals, token counts, clipping), so the oracle and the fast twin are
+    trajectory-equal on equal seeds by construction;
+  * **batch formation** — ``formation()`` returns an iterator-style state
+    whose ``next_batch(t_free)`` encodes the trigger (when service starts)
+    and the member-selection rule (who is in the batch);
+  * **service law** — ``batch_time`` (simulator layer, a
+    ``BatchLatencyModel``/``LatencyModel``) and ``service_clock``
+    (scheduler layer, a ``ServiceClock``) give the batch occupancy and the
+    per-member completion offsets;
+  * **analytic delay** — ``analytic_delay`` exposes the paper's closed
+    forms/bounds (Pollaczek-Khinchine, Inoue Eq 16, M/D^b/1 Eq 25) behind
+    one method; ``analytic_kind`` says whether it is exact, an upper bound
+    or an approximation.
+
+Consumers dispatch structurally, never by policy name:
+
+  * :func:`repro.core.simulate.simulate_policy` picks the event loop from
+    ``policy.oracle_kind`` ("mg1" | "batches" | "continuous");
+  * :func:`repro.core.fastsim.sweep` picks the compiled kernel from
+    ``policy.fast_kernel`` ("mg1" | "batch_scan" | "fixed_cummax" |
+    "multibin" | None -> oracle fallback);
+  * :class:`repro.serving.scheduler.PolicyScheduler` binds a policy to a
+    ``ServiceClock`` (model-based or the real engine).
+
+Adding a discipline is one subclass + ``@register``; it then automatically
+appears in the oracle, the fast sweep, the schedulers, the cross-layer
+agreement tests (``tests/test_policies.py``) and the registry-driven
+benchmarks.  :class:`MultiBinPolicy` (Guldogan et al. 2024) is the first
+policy added this way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Type
+
+import numpy as np
+
+from repro.core.distributions import TokenDistribution
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+
+
+# ----------------------------------------------------------------------------
+# Workload: the sampled request stream a policy operates on
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Arrivals + (clipped) output-token counts, sampled in a fixed rng
+    order so every layer sees the same trajectory for equal seeds."""
+
+    arrivals: np.ndarray          # absolute arrival times (cumsum of expos)
+    tokens: np.ndarray            # float64 output-token counts (clipped)
+    inter: Optional[np.ndarray] = None   # inter-arrival times (FCFS oracle)
+
+
+def single_from_batch(lat: BatchLatencyModel) -> LatencyModel:
+    """A single-request latency law derived from the batch law: S(n) =
+    H(1, n) = (k1 + k2) + (k3 + k4) n.  Used when a single-service policy
+    (FCFS) is swept with only a ``BatchLatencyModel`` in hand."""
+    return LatencyModel(a=lat.k3 + lat.k4, c=lat.k1 + lat.k2)
+
+
+# ----------------------------------------------------------------------------
+# Formation states (trigger + member selection, shared by oracle & scheduler)
+# ----------------------------------------------------------------------------
+
+class _DynamicFormation:
+    """Serve everything waiting when the server frees (cap ``b_max``); an
+    idle server starts the next arrival alone at its arrival time."""
+
+    def __init__(self, arrivals: np.ndarray, b_max: Optional[int]):
+        self.arrivals = arrivals
+        self.b_max = b_max
+        self.head = 0
+
+    def next_batch(self, t_free: float):
+        arr, head = self.arrivals, self.head
+        if head >= len(arr):
+            return None
+        if arr[head] >= t_free:
+            start, hi = arr[head], head + 1
+        else:
+            start = t_free
+            hi = int(np.searchsorted(arr, t_free, side="right"))
+        if self.b_max:
+            hi = min(hi, head + self.b_max)
+        self.head = hi
+        return float(start), np.arange(head, hi)
+
+
+class _FixedFormation:
+    """Wait until exactly ``b`` requests are present (paper §IV-C)."""
+
+    def __init__(self, arrivals: np.ndarray, b: int):
+        self.arrivals = arrivals
+        self.b = b
+        self.head = 0
+        self.n = (len(arrivals) // b) * b
+
+    def next_batch(self, t_free: float):
+        head, b = self.head, self.b
+        if head >= self.n:
+            return None
+        start = max(t_free, float(self.arrivals[head + b - 1]))
+        self.head = head + b
+        return start, np.arange(head, head + b)
+
+
+class _MultiBinFormation:
+    """Per-bin FIFO queues, one shared server.  When the server frees it
+    serves min(waiting, b_max) requests from the non-empty bin whose head
+    arrived earliest (FCFS across bins); an idle server starts the next
+    arrival alone, exactly like dynamic batching."""
+
+    def __init__(self, arrivals: np.ndarray, bin_of: np.ndarray,
+                 num_bins: int, b_max: Optional[int]):
+        self.b_max = b_max
+        # per-bin request-index lists (arrival order is preserved because
+        # the global stream is already sorted by arrival)
+        self.members = [np.nonzero(bin_of == j)[0] for j in range(num_bins)]
+        self.arr = [arrivals[m] for m in self.members]
+        self.heads = [0] * num_bins
+
+    def next_batch(self, t_free: float):
+        a_min, j_min = np.inf, -1
+        for j, h in enumerate(self.heads):
+            if h < len(self.arr[j]) and self.arr[j][h] < a_min:
+                a_min, j_min = float(self.arr[j][h]), j
+        if j_min < 0:
+            return None
+        h = self.heads[j_min]
+        if a_min >= t_free:
+            start, hi = a_min, h + 1
+        else:
+            start = t_free
+            hi = int(np.searchsorted(self.arr[j_min], t_free, side="right"))
+            if self.b_max:
+                hi = min(hi, h + self.b_max)
+        self.heads[j_min] = hi
+        return start, self.members[j_min][h:hi]
+
+
+# ----------------------------------------------------------------------------
+# BatchPolicy protocol + registry
+# ----------------------------------------------------------------------------
+
+REGISTRY: Dict[str, Type["BatchPolicy"]] = {}
+
+
+def register(cls: Type["BatchPolicy"]) -> Type["BatchPolicy"]:
+    REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_policy(name: str, **kwargs) -> "BatchPolicy":
+    return REGISTRY[name](**kwargs)
+
+
+def policy_from_spec(spec: dict) -> "BatchPolicy":
+    """Legacy ``{"kind": ..., **params}`` spec dicts -> policy instance."""
+    spec = dict(spec)
+    kind = spec.pop("kind")
+    if kind not in REGISTRY:
+        raise ValueError(kind)
+    return REGISTRY[kind](**spec)
+
+
+def default_policies(b: int = 4, b_max: Optional[int] = 8,
+                     num_bins: int = 4) -> Dict[str, "BatchPolicy"]:
+    """One representative instance per registered discipline — the set the
+    cross-layer agreement tests and the registry-driven benchmarks iterate."""
+    return {
+        "fcfs": FCFSPolicy(),
+        "dynamic": DynamicPolicy(),
+        f"dynamic_b{b_max}": DynamicPolicy(b_max=b_max),
+        "elastic": ElasticPolicy(),
+        f"fixed_b{b}": FixedPolicy(b=b),
+        f"multibin_{num_bins}": MultiBinPolicy(num_bins=num_bins),
+        "continuous": ContinuousPolicy(slots=16),
+    }
+
+
+class BatchPolicy:
+    """One serving discipline, defined once for every layer.
+
+    Class attributes (the structural dispatch surface):
+      name               registry key
+      oracle_kind        event-loop family in ``repro.core.simulate``
+      fast_kernel        compiled kernel in ``repro.core.fastsim`` (None ->
+                         the fast layer falls back to the oracle)
+      analytic_kind      'exact' | 'bound' | 'approx' | None
+      uses_single_latency  True -> expects a ``LatencyModel`` (single
+                         request); drivers convert a ``BatchLatencyModel``
+                         via :func:`single_from_batch`
+    """
+
+    name = "base"
+    oracle_kind = "batches"
+    fast_kernel: Optional[str] = None
+    analytic_kind: Optional[str] = None
+    uses_single_latency = False
+
+    def __init__(self, n_max: Optional[int] = None):
+        self.n_max = n_max
+
+    # -------------------- workload law --------------------
+    def sample_workload(self, lam: float, dist: Optional[TokenDistribution],
+                        num_requests: int, seed: int) -> Workload:
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(1.0 / lam, num_requests))
+        if dist is not None:
+            tokens = dist.sample(rng, num_requests).astype(np.float64)
+        else:
+            tokens = np.zeros(num_requests)
+        if self.n_max is not None:
+            tokens = np.minimum(tokens, self.n_max)
+        return Workload(arrivals=arrivals, tokens=tokens)
+
+    def clip(self, tokens):
+        return (np.minimum(tokens, self.n_max) if self.n_max is not None
+                else tokens)
+
+    # -------------------- formation (trigger + membership) ------------
+    def formation(self, arrivals: np.ndarray, tokens: np.ndarray,
+                  dist: Optional[TokenDistribution] = None):
+        raise NotImplementedError
+
+    def schedule_length(self, n: int) -> int:
+        """How many of ``n`` offered requests this policy serves (fixed
+        batching truncates to a multiple of b)."""
+        return n
+
+    # -------------------- service law --------------------
+    def batch_time(self, ns: np.ndarray, lat) -> float:
+        """Batch occupancy on the simulator layer (``lat`` is the policy's
+        latency model: batch or single per ``uses_single_latency``)."""
+        raise NotImplementedError
+
+    def service_clock(self, ns: np.ndarray, clock):
+        """(occupancy, per-member completion offsets) on the scheduler
+        layer.  Default: padded semantics — everyone completes with the
+        batch."""
+        h = clock.batch_time(ns)
+        return h, np.full(len(ns), h)
+
+    # -------------------- analytics --------------------
+    def analytic_delay(self, lam: float, dist: TokenDistribution,
+                       lat) -> Optional[float]:
+        """Mean queueing delay from the paper's closed forms, or None when
+        the discipline has no analytic form yet (see ``analytic_kind``)."""
+        return None
+
+    # -------------------- convenience layer entry points --------------
+    def simulate(self, lam, dist, lat, num_requests: int = 200_000,
+                 seed: int = 0) -> dict:
+        from repro.core.simulate import simulate_policy
+        return simulate_policy(self, lam, dist, lat,
+                               num_requests=num_requests, seed=seed)
+
+    def simulate_fast(self, lam, dist, lat, num_requests: int = 200_000,
+                      seed: int = 0) -> dict:
+        from repro.core.fastsim import simulate_policy_fast
+        return simulate_policy_fast(self, lam, dist, lat,
+                                    num_requests=num_requests, seed=seed)
+
+    def scheduler(self, clock):
+        from repro.serving.scheduler import PolicyScheduler
+        return PolicyScheduler(self, clock)
+
+    # -------------------- fast-path hints --------------------
+    def scan_lane(self):
+        """(elastic_flag, b_max) when this policy can ride a lane of the
+        shared vmapped per-request batching scan, else None."""
+        return None
+
+    def __repr__(self):
+        keys = {k: v for k, v in vars(self).items() if v is not None}
+        return f"{type(self).__name__}({keys})"
+
+
+# ----------------------------------------------------------------------------
+# The paper's disciplines
+# ----------------------------------------------------------------------------
+
+@register
+class FCFSPolicy(BatchPolicy):
+    """M/G/1 FCFS with max-token clipping and optional deterministic
+    impatience tau (paper §III, Eqs 1-9)."""
+
+    name = "fcfs"
+    oracle_kind = "mg1"
+    fast_kernel = "mg1"
+    analytic_kind = "exact"
+    uses_single_latency = True
+
+    def __init__(self, n_max: Optional[int] = None,
+                 tau: Optional[float] = None):
+        super().__init__(n_max)
+        self.tau = tau
+
+    def sample_workload(self, lam, dist, num_requests, seed) -> Workload:
+        # The FCFS oracle consumes inter-arrival times directly (same rng
+        # call order as arrivals=cumsum(inter), so trajectories still align).
+        rng = np.random.default_rng(seed)
+        inter = rng.exponential(1.0 / lam, num_requests)
+        tokens = self.clip(dist.sample(rng, num_requests))
+        return Workload(arrivals=np.cumsum(inter), tokens=tokens, inter=inter)
+
+    def formation(self, arrivals, tokens, dist=None):
+        return _DynamicFormation(arrivals, b_max=1)
+
+    def batch_time(self, ns, lat) -> float:
+        return float(lat.service_time(ns[0]))
+
+    def service_clock(self, ns, clock):
+        h = clock.single_time(ns[0])
+        return h, np.array([h])
+
+    def analytic_delay(self, lam, dist, lat) -> float:
+        from repro.core.mg1 import mg1_wait
+        if isinstance(lat, BatchLatencyModel):
+            lat = single_from_batch(lat)
+        if self.tau is not None:
+            from repro.core.impatience import exact_impatience
+            return exact_impatience(dist, lat, lam, self.tau, self.n_max).wq_all
+        return mg1_wait(dist, lat, lam, self.n_max).wait
+
+    def optimize_n_max(self, lam, dist, lat, theta: float,
+                       loss_cost: float = 4.0) -> int:
+        """The paper's optimal max-token limit (Eqs 10-13) for this
+        discipline: V1 when users are patient, V2 under impatience tau."""
+        from repro.core.policy_opt import (
+            optimize_token_limit_v1, optimize_token_limit_v2)
+        if isinstance(lat, BatchLatencyModel):
+            lat = single_from_batch(lat)
+        if self.tau is None:
+            return optimize_token_limit_v1(dist, lat, lam, theta).n_max
+        return optimize_token_limit_v2(dist, lat, lam, theta, self.tau,
+                                       loss_cost).n_max
+
+
+@register
+class DynamicPolicy(BatchPolicy):
+    """Dynamic batching: serve all waiting (cap ``b_max``) with padded
+    decode H[b, max] (paper §IV-A/B, Eq 18)."""
+
+    name = "dynamic"
+    fast_kernel = "batch_scan"
+    analytic_kind = "bound"
+
+    def __init__(self, n_max: Optional[int] = None,
+                 b_max: Optional[int] = None):
+        super().__init__(n_max)
+        self.b_max = b_max
+        if b_max is not None:
+            # the Inoue bound assumes serve-ALL-waiting; capping batch size
+            # lowers throughput, so the unbounded bound is not an upper
+            # bound for the capped system — no closed form available
+            self.analytic_kind = None
+
+    def formation(self, arrivals, tokens, dist=None):
+        return _DynamicFormation(arrivals, self.b_max)
+
+    def batch_time(self, ns, lat) -> float:
+        return float(lat.batch_time(len(ns), ns.max()))
+
+    def scan_lane(self):
+        return (False, self.b_max)
+
+    def analytic_delay(self, lam, dist, lat) -> Optional[float]:
+        from repro.core.bulk import dynamic_batching_bound
+        if self.b_max is not None:
+            return None
+        return dynamic_batching_bound(dist if self.n_max is None
+                                      else dist.clip(self.n_max),
+                                      lat, lam)["wait_bound"]
+
+
+@register
+class ElasticPolicy(DynamicPolicy):
+    """Elastic batching: dynamic formation, but short replies exit early
+    (completion via Eq 26) and the batch ends at the slowest member."""
+
+    name = "elastic"
+
+    def batch_time(self, ns, lat) -> float:
+        return lat.elastic_batch_time(ns)
+
+    def service_clock(self, ns, clock):
+        comp = clock.elastic_times(ns)            # sorted ascending order
+        order = np.argsort(ns, kind="stable")
+        offsets = np.empty(len(ns))
+        offsets[order] = comp
+        return float(comp.max()), offsets
+
+    def scan_lane(self):
+        return (True, self.b_max)
+
+    def analytic_delay(self, lam, dist, lat) -> Optional[float]:
+        from repro.core.bulk import elastic_batching_bound
+        if self.b_max is not None:
+            return None
+        return elastic_batching_bound(dist if self.n_max is None
+                                      else dist.clip(self.n_max),
+                                      lat, lam)["wait_bound"]
+
+
+@register
+class FixedPolicy(BatchPolicy):
+    """Fixed batching M/D^b/1: wait until exactly ``b`` requests are
+    present (paper §IV-C, Eqs 24-25)."""
+
+    name = "fixed"
+    fast_kernel = "fixed_cummax"
+    analytic_kind = "approx"     # Eq 25 treats H^[b] as deterministic
+
+    def __init__(self, b: int = 4, n_max: Optional[int] = None):
+        super().__init__(n_max)
+        self.b = b
+
+    def sample_workload(self, lam, dist, num_requests, seed) -> Workload:
+        return super().sample_workload(
+            lam, dist, (num_requests // self.b) * self.b, seed)
+
+    def formation(self, arrivals, tokens, dist=None):
+        return _FixedFormation(arrivals, self.b)
+
+    def schedule_length(self, n: int) -> int:
+        return (n // self.b) * self.b
+
+    def batch_time(self, ns, lat) -> float:
+        return float(lat.batch_time(len(ns), ns.max()))
+
+    def analytic_delay(self, lam, dist, lat) -> float:
+        from repro.core.bulk import mdb1_wait_exact
+        d = dist if self.n_max is None else dist.clip(self.n_max)
+        h = float(lat.mean_batch_time(d, self.b))
+        return mdb1_wait_exact(lam, h, self.b)
+
+
+@register
+class MultiBinPolicy(BatchPolicy):
+    """Multi-bin batching (Guldogan et al. 2024): requests are routed to
+    bins by (predicted) output length; within a bin, dynamic batching with
+    padded decode; the server picks the non-empty bin whose head request
+    arrived earliest.  Because bin members have similar lengths, the
+    H[b, max] padding waste shrinks, buying throughput at high load.
+
+    ``edges``: ascending upper token boundaries (last bin open-ended).
+    ``edges=None``: equal-probability-mass boundaries are derived from the
+    workload's token distribution at run time (the paper's suggestion)."""
+
+    name = "multibin"
+    fast_kernel = "multibin"
+    analytic_kind = None          # ROADMAP: per-bin Inoue-style bound
+
+    def __init__(self, num_bins: int = 4,
+                 edges: Optional[Sequence[float]] = None,
+                 n_max: Optional[int] = None,
+                 b_max: Optional[int] = None):
+        super().__init__(n_max)
+        self.num_bins = int(num_bins if edges is None else len(edges) + 1)
+        self.edges = None if edges is None else tuple(float(e) for e in edges)
+        self.b_max = b_max
+
+    def bin_edges(self, dist: Optional[TokenDistribution],
+                  tokens: Optional[np.ndarray] = None) -> np.ndarray:
+        """Boundaries actually used: explicit ``edges``; else equal-mass
+        quantiles of ``dist`` (after clipping); else — on the scheduler
+        layer, where only observed lengths exist — empirical quantiles of
+        ``tokens``."""
+        qs = np.arange(1, self.num_bins) / self.num_bins
+        if self.edges is not None:
+            return np.asarray(self.edges, np.float64)
+        if dist is not None:
+            d = dist if self.n_max is None else dist.clip(self.n_max)
+            return np.asarray([np.searchsorted(d.cdf, q) for q in qs],
+                              np.float64)
+        assert tokens is not None, "multibin needs edges, a dist, or tokens"
+        return np.quantile(np.asarray(tokens, np.float64), qs)
+
+    def bin_of(self, tokens: np.ndarray,
+               dist: Optional[TokenDistribution] = None) -> np.ndarray:
+        return np.searchsorted(self.bin_edges(dist, tokens), tokens,
+                               side="left")
+
+    def formation(self, arrivals, tokens, dist=None):
+        return _MultiBinFormation(arrivals, self.bin_of(tokens, dist),
+                                  self.num_bins, self.b_max)
+
+    def batch_time(self, ns, lat) -> float:
+        return float(lat.batch_time(len(ns), ns.max()))
+
+
+@register
+class ContinuousPolicy(BatchPolicy):
+    """Iteration-level (Orca/vLLM-style) batching — beyond paper.  ``slots``
+    decode streams; a freed slot refills immediately; admission and refill
+    at ``chunk`` boundaries, mirroring the engine's fused decode loop."""
+
+    name = "continuous"
+    oracle_kind = "continuous"
+    fast_kernel = None            # virtual-timeline loop IS the simulator
+
+    def __init__(self, slots: int = 16, n_max: Optional[int] = None,
+                 chunk: int = 1):
+        super().__init__(n_max)
+        assert chunk >= 1
+        self.slots = slots
+        self.chunk = chunk
+
+    def scheduler(self, clock):
+        from repro.serving.scheduler import ContinuousBatchScheduler
+        return ContinuousBatchScheduler(clock, slots=self.slots,
+                                        n_max=self.n_max, chunk=self.chunk)
+
+
+__all__ = [
+    "BatchPolicy", "ContinuousPolicy", "DynamicPolicy", "ElasticPolicy",
+    "FCFSPolicy", "FixedPolicy", "MultiBinPolicy", "REGISTRY", "Workload",
+    "default_policies", "get_policy", "policy_from_spec", "register",
+    "single_from_batch",
+]

@@ -1,33 +1,46 @@
-"""Event-driven simulators (paper §V's validation methodology).
+"""Policy-driven reference oracle (paper §V's validation methodology).
 
-Every analytic quantity in ``mg1``, ``impatience`` and ``bulk`` is validated
-against these simulators in the test-suite and benchmarks. They model:
+Since the batching-policy refactor every serving discipline is defined ONCE
+in :mod:`repro.core.policies` (formation trigger, member selection,
+clipping, service law); this module contributes the *event loops* that
+drive a policy on a sampled workload:
 
-  * FCFS M/G/1 with max-token clipping and (optionally) deterministic
-    impatience tau  (paper Figs 4a-4c)
-  * dynamic batching (all waiting requests, optionally capped at b_max)
-    with padded batch time H[b, l]         (paper Figs 5, 6b)
-  * fixed batching (wait until exactly b)  (paper Fig 6a)
-  * elastic batching (early-exit replies, Eq 26)  (paper Figs 5, 6b)
+  * ``_oracle_mg1``        — single-server Lindley / workload recursion
+    (FCFS with optional deterministic impatience tau; paper Figs 4a-4c)
+  * ``_oracle_batches``    — the generic batch-formation loop shared by
+    dynamic, fixed, elastic and multi-bin batching (paper Figs 5-6; the
+    policy's ``formation()`` supplies trigger+membership, its
+    ``batch_time()`` the service law)
+  * ``_oracle_continuous`` — iteration-level slot refill on a virtual
+    clock (beyond paper; mirrors the engine's fused chunked decode)
+
+``simulate_policy(policy, ...)`` dispatches on ``policy.oracle_kind``; the
+``ORACLES`` table is extensible, so a new policy family can register its
+own loop without touching existing ones.  The legacy entry points
+(``simulate_mg1``, ``simulate_dynamic_batching``, ...) are thin wrappers
+that construct the corresponding policy — they remain trajectory-equal
+(bit-equal waits) to the pre-refactor loops.
 
 Waits are *queueing delays* (arrival -> service start), matching the paper.
 
-These interpreted event loops are the REFERENCE ORACLE: they favour
-obviousness over speed. Production sweeps (λ grids, policy search) should
-use :mod:`repro.core.fastsim`, whose compiled scan/closed-form twins sample
-with the same rng call order and are pinned trajectory-equal to these loops
-by ``tests/test_fastsim.py``.
+These interpreted loops are the REFERENCE ORACLE: they favour obviousness
+over speed.  Production sweeps (λ grids, policy search) should use
+:mod:`repro.core.fastsim`, whose compiled kernels sample with the same rng
+call order and are pinned trajectory-equal to these loops by
+``tests/test_fastsim.py`` and ``tests/test_policies.py``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
 from repro.core.distributions import TokenDistribution
 from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policies import (
+    BatchPolicy, ContinuousPolicy, DynamicPolicy, ElasticPolicy, FCFSPolicy,
+    FixedPolicy, Workload, policy_from_spec)
 
 
 def _warm(arr, frac=0.1):
@@ -35,19 +48,40 @@ def _warm(arr, frac=0.1):
     return np.asarray(arr[k:])
 
 
+ORACLES: Dict[str, Callable] = {}
+
+
+def oracle(kind: str):
+    def deco(fn):
+        ORACLES[kind] = fn
+        return fn
+    return deco
+
+
+def simulate_policy(policy: BatchPolicy, lam: float,
+                    dist: Optional[TokenDistribution], lat,
+                    num_requests: int = 200_000, seed: int = 0) -> dict:
+    """Run ``policy`` through its reference event loop.  ``lat`` is the
+    policy's latency law (``LatencyModel`` for single-service policies,
+    ``BatchLatencyModel`` otherwise — a batch law handed to a
+    single-service policy is converted via ``single_from_batch``)."""
+    if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
+        from repro.core.policies import single_from_batch
+        lat = single_from_batch(lat)
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    return ORACLES[policy.oracle_kind](policy, wl, lat, dist)
+
+
 # ----------------------------------------------------------------------------
-# M/G/1 FCFS
+# M/G/1 FCFS (single-service policies)
 # ----------------------------------------------------------------------------
 
-def simulate_mg1(lam: float, dist: TokenDistribution, lat: LatencyModel,
-                 n_max: Optional[int] = None, tau: Optional[float] = None,
-                 num_requests: int = 200_000, seed: int = 0) -> dict:
-    rng = np.random.default_rng(seed)
-    inter = rng.exponential(1.0 / lam, num_requests)
-    tokens = dist.sample(rng, num_requests)
-    if n_max is not None:
-        tokens = np.minimum(tokens, n_max)
+@oracle("mg1")
+def _oracle_mg1(policy, wl: Workload, lat, dist) -> dict:
+    inter, tokens = wl.inter, wl.tokens
     service = lat.service_time(tokens)
+    tau = policy.tau
+    num_requests = len(tokens)
 
     if tau is None:
         # vectorized Lindley recursion: W_{n+1} = max(0, W_n + S_n - A_{n+1})
@@ -67,9 +101,7 @@ def simulate_mg1(lam: float, dist: TokenDistribution, lat: LatencyModel,
     waits = np.empty(num_requests)
     lost = np.zeros(num_requests, bool)
     v = 0.0
-    t = 0.0
     for i in range(num_requests):
-        t += inter[i]
         v = max(0.0, v - inter[i])
         if v >= tau:
             waits[i] = tau          # lost users spend tau in queue (Eq 9)
@@ -89,8 +121,63 @@ def simulate_mg1(lam: float, dist: TokenDistribution, lat: LatencyModel,
 
 
 # ----------------------------------------------------------------------------
-# Batching simulators
+# Generic batch-formation loop (dynamic / fixed / elastic / multi-bin / ...)
 # ----------------------------------------------------------------------------
+
+@oracle("batches")
+def _oracle_batches(policy, wl: Workload, lat, dist) -> dict:
+    arr, tok = wl.arrivals, wl.tokens
+    fs = policy.formation(arr, tok, dist)
+    waits = np.empty(len(arr))
+    batch_sizes = []
+    t_free = 0.0
+    while (nb := fs.next_batch(t_free)) is not None:
+        start, idx = nb
+        waits[idx] = start - arr[idx]
+        h = policy.batch_time(tok[idx], lat)
+        batch_sizes.append(len(idx))
+        t_free = start + h
+    w = _warm(waits)
+    return {
+        "mean_wait": float(w.mean()),
+        "p95_wait": float(np.percentile(w, 95)),
+        "mean_batch": float(np.mean(batch_sizes)),
+        "waits": w,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Continuous (iteration-level) batching on a virtual clock
+# ----------------------------------------------------------------------------
+
+@oracle("continuous")
+def _oracle_continuous(policy, wl: Workload, lat: BatchLatencyModel,
+                       dist) -> dict:
+    from repro.serving.scheduler import run_continuous_virtual
+    waits, _e2e, _makespan = run_continuous_virtual(
+        wl.arrivals, wl.tokens.astype(np.int64), slots=policy.slots,
+        chunk=policy.chunk,
+        prefill_time=lambda b: float(lat.k1 * b + lat.k2),
+        decode_step_time=lambda b: float(lat.k3 * b + lat.k4))
+    w = _warm(waits)
+    return {
+        "mean_wait": float(w.mean()),
+        "p95_wait": float(np.percentile(w, 95)),
+        "mean_batch": float(policy.slots),
+        "waits": w,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Legacy entry points (thin policy wrappers; trajectory-equal to pre-refactor)
+# ----------------------------------------------------------------------------
+
+def simulate_mg1(lam: float, dist: TokenDistribution, lat: LatencyModel,
+                 n_max: Optional[int] = None, tau: Optional[float] = None,
+                 num_requests: int = 200_000, seed: int = 0) -> dict:
+    return simulate_policy(FCFSPolicy(n_max=n_max, tau=tau), lam, dist, lat,
+                           num_requests=num_requests, seed=seed)
+
 
 def simulate_dynamic_batching(lam: float, dist: TokenDistribution,
                               lat: BatchLatencyModel,
@@ -102,41 +189,9 @@ def simulate_dynamic_batching(lam: float, dist: TokenDistribution,
     """Dynamic batching: when the server frees, take min(waiting, b_max)
     requests in one batch (all of them when b_max is None). elastic=True uses
     the Eq-26 completion time instead of padded H[b, max]."""
-    rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / lam, num_requests))
-    tokens = dist.sample(rng, num_requests).astype(np.float64)
-    if n_max is not None:
-        tokens = np.minimum(tokens, n_max)
-
-    waits = np.empty(num_requests)
-    batch_sizes = []
-    head = 0                  # next unserved request
-    t_free = 0.0
-    while head < num_requests:
-        # requests that have arrived by t_free
-        if arrivals[head] >= t_free:
-            # idle: serve the next arrival alone at its arrival time
-            start = arrivals[head]
-            hi = head + 1
-        else:
-            start = t_free
-            hi = int(np.searchsorted(arrivals, t_free, side="right"))
-        if b_max is not None:
-            hi = min(hi, head + b_max)
-        ns = tokens[head:hi]
-        waits[head:hi] = start - arrivals[head:hi]
-        h = (lat.elastic_batch_time(ns) if elastic
-             else float(lat.batch_time(len(ns), ns.max())))
-        batch_sizes.append(len(ns))
-        t_free = start + h
-        head = hi
-    w = _warm(waits)
-    return {
-        "mean_wait": float(w.mean()),
-        "p95_wait": float(np.percentile(w, 95)),
-        "mean_batch": float(np.mean(batch_sizes)),
-        "waits": w,
-    }
+    cls = ElasticPolicy if elastic else DynamicPolicy
+    return simulate_policy(cls(n_max=n_max, b_max=b_max), lam, dist, lat,
+                           num_requests=num_requests, seed=seed)
 
 
 def simulate_fixed_batching(lam: float, b: int,
@@ -146,54 +201,28 @@ def simulate_fixed_batching(lam: float, b: int,
                             num_requests: int = 200_000,
                             seed: int = 0) -> dict:
     """Fixed batching: the server waits until exactly b requests are present
-    (paper §IV-C), then serves them together."""
-    rng = np.random.default_rng(seed)
-    num_requests = (num_requests // b) * b
-    arrivals = np.cumsum(rng.exponential(1.0 / lam, num_requests))
-    if dist is not None:
-        tokens = dist.sample(rng, num_requests).astype(np.float64)
+    (paper §IV-C), then serves them together.  ``batch_time`` overrides the
+    policy's service law (used by the M/D^b/1 validation tests)."""
+    pol = FixedPolicy(b=b)
+    if batch_time is not None:
+        pol.batch_time = lambda ns, _lat: float(batch_time(ns))
     else:
-        tokens = np.zeros(num_requests)
-    if batch_time is None:
         assert lat is not None
-        batch_time = lambda ns: float(lat.batch_time(len(ns), ns.max()))
-
-    waits = np.empty(num_requests)
-    t_free = 0.0
-    for head in range(0, num_requests, b):
-        batch_arr = arrivals[head:head + b]
-        start = max(t_free, batch_arr[-1])   # need all b present
-        waits[head:head + b] = start - batch_arr
-        t_free = start + batch_time(tokens[head:head + b])
-    w = _warm(waits)
-    return {
-        "mean_wait": float(w.mean()),
-        "p95_wait": float(np.percentile(w, 95)),
-        "waits": w,
-    }
+    return simulate_policy(pol, lam, dist, lat,
+                           num_requests=num_requests, seed=seed)
 
 
 def simulate_policy_sweep(lam_grid, dist, lat, policies: dict,
                           num_requests: int = 100_000, seed: int = 0) -> dict:
-    """Convenience: mean wait for each policy over an arrival-rate grid.
-    policies: name -> dict(kind='dynamic'|'fixed'|'elastic', **kwargs)."""
-    out = {name: [] for name in policies}
+    """Mean wait for each policy over an arrival-rate grid.  ``policies``:
+    name -> BatchPolicy instance or legacy dict(kind=..., **kwargs)."""
+    insts = {name: (spec if isinstance(spec, BatchPolicy)
+                    else policy_from_spec(spec))
+             for name, spec in policies.items()}
+    out = {name: [] for name in insts}
     for lam in lam_grid:
-        for name, spec in policies.items():
-            kind = spec.get("kind")
-            if kind == "dynamic":
-                r = simulate_dynamic_batching(
-                    lam, dist, lat, b_max=spec.get("b_max"),
-                    num_requests=num_requests, seed=seed)
-            elif kind == "elastic":
-                r = simulate_dynamic_batching(
-                    lam, dist, lat, b_max=spec.get("b_max"), elastic=True,
-                    num_requests=num_requests, seed=seed)
-            elif kind == "fixed":
-                r = simulate_fixed_batching(
-                    lam, spec["b"], dist, lat,
-                    num_requests=num_requests, seed=seed)
-            else:
-                raise ValueError(kind)
+        for name, pol in insts.items():
+            r = simulate_policy(pol, lam, dist, lat,
+                                num_requests=num_requests, seed=seed)
             out[name].append(r["mean_wait"])
     return {k: np.asarray(v) for k, v in out.items()}

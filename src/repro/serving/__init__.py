@@ -1,7 +1,8 @@
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.scheduler import (
     FCFSScheduler, DynamicBatchScheduler, FixedBatchScheduler,
-    ElasticBatchScheduler, ContinuousBatchScheduler, run_schedule,
+    ElasticBatchScheduler, ContinuousBatchScheduler, MultiBinBatchScheduler,
+    PolicyScheduler, run_engine_schedule, run_schedule,
 )
 from repro.serving.metrics import summarize
 from repro.serving.continuous import serve_continuous, splice_cache
@@ -9,7 +10,9 @@ from repro.serving.continuous import serve_continuous, splice_cache
 __all__ = [
     "Engine", "EngineConfig",
     "FCFSScheduler", "DynamicBatchScheduler", "FixedBatchScheduler",
-    "ElasticBatchScheduler", "ContinuousBatchScheduler", "run_schedule",
+    "ElasticBatchScheduler", "ContinuousBatchScheduler",
+    "MultiBinBatchScheduler", "PolicyScheduler", "run_engine_schedule",
+    "run_schedule",
     "summarize",
     "serve_continuous", "splice_cache",
 ]

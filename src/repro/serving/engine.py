@@ -57,6 +57,8 @@ class EngineConfig:
     greedy: bool = True
     min_bucket: int = 1
     decode_chunk: int = 32         # decode steps fused per host sync
+    temperature: float = 0.0       # 0 -> greedy argmax decoding
+    top_k: Optional[int] = None    # sample from the k best logits only
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -64,6 +66,16 @@ def _bucket(n: int, lo: int, hi: int) -> int:
     while b < n and b < hi:
         b *= 2
     return min(b, hi)
+
+
+def _sample_tokens(key, logits, temperature: float, top_k: Optional[int]):
+    """Temperature / top-k sampling over [..., vocab] logits (temperature
+    is a trace-time constant; temperature=0 callers use argmax instead)."""
+    if top_k is not None:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
 
 
 class Engine:
@@ -78,9 +90,10 @@ class Engine:
         self.params = params
         self._prefill_fns: Dict[Tuple[int, int], callable] = {}
         self._decode_fns: Dict[int, callable] = {}
-        self._chunk_fns: Dict[Tuple[int, int], callable] = {}
+        self._chunk_fns: Dict[tuple, callable] = {}
         self.step_log: List[dict] = []    # (kind, batch, seq, seconds[, steps])
         self.host_syncs = 0               # device->host blocking round-trips
+        self._sample_key = jax.random.PRNGKey(seed)   # decode sampling stream
 
     # ------------------------------------------------------------------
     def _get_prefill(self, b: int, s: int):
@@ -105,9 +118,17 @@ class Engine:
             self._decode_fns[b] = jax.jit(fn, donate_argnums=(1,))
         return self._decode_fns[b]
 
-    def _get_decode_chunk(self, b: int, steps: int):
-        """Fused multi-step decode: ``steps`` greedy decode iterations as one
-        ``lax.scan``, carrying (cache, tok, kv_lens, produced) device-side.
+    def _get_decode_chunk(self, b: int, steps: int, temperature: float = 0.0,
+                          top_k: Optional[int] = None):
+        """Fused multi-step decode: ``steps`` decode iterations as one
+        ``lax.scan``, carrying (cache, tok, kv_lens, produced, rng key)
+        device-side.
+
+        The PRNG key rides the scan carry and splits once per step, so
+        temperature/top-k sampling inside the fused chunk consumes the same
+        key stream regardless of chunk size — chunk=1 and chunk=N produce
+        identical samples for a given starting key.  ``temperature=0``
+        (the default) is greedy argmax and never touches the key.
 
         Emits the per-step sampled token and active mask so the caller can
         reconstruct exact token streams / completion steps after the single
@@ -117,33 +138,38 @@ class Engine:
         pointer; with the ragged decode-attention kernel they also stop
         paying padded KV compute.
         """
-        key = (b, steps)
+        key = (b, steps, float(temperature), top_k)
         if key not in self._chunk_fns:
             cfg, ctx = self.cfg, self.ctx
             max_seq = self.ecfg.max_seq
             advance_all = cfg.decode_cache_update == "uniform"
 
-            def fn(params, cache, tok, kv_lens, produced, targets):
+            def fn(params, cache, tok, kv_lens, produced, targets, rng):
                 def body(carry, _):
-                    cache, tok, kv_lens, produced = carry
+                    cache, tok, kv_lens, produced, rng = carry
                     logits, cache = decode_step(cfg, params, cache, tok,
                                                 kv_lens, ctx=ctx)
                     if cfg.decode_unroll_layers:
                         # unrolled decode returns a per-group split dict;
                         # restack so the scan carry keeps one structure
                         cache = stack_group_cache(cache, cfg.num_groups)
-                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    if temperature > 0.0:
+                        rng, sub = jax.random.split(rng)
+                        nxt = _sample_tokens(sub, logits, temperature, top_k)
+                    else:
+                        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                     active = produced < targets
                     produced = produced + active.astype(produced.dtype)
                     step = (jnp.ones_like(kv_lens) if advance_all
                             else active.astype(kv_lens.dtype))
                     kv_lens = jnp.minimum(kv_lens + step, max_seq - 1)
-                    return (cache, nxt, kv_lens, produced), (nxt, active)
+                    return (cache, nxt, kv_lens, produced, rng), (nxt, active)
 
                 carry, (toks, actives) = lax.scan(
-                    body, (cache, tok, kv_lens, produced), None, length=steps)
-                cache, tok, kv_lens, produced = carry
-                return cache, tok, kv_lens, produced, toks, actives
+                    body, (cache, tok, kv_lens, produced, rng), None,
+                    length=steps)
+                cache, tok, kv_lens, produced, rng = carry
+                return cache, tok, kv_lens, produced, rng, toks, actives
 
             self._chunk_fns[key] = jax.jit(fn, donate_argnums=(1,))
         return self._chunk_fns[key]
@@ -196,15 +222,19 @@ class Engine:
         return nxt, cache, dt
 
     def decode_chunk(self, cache, kv_lens, tokens, produced, targets,
-                     steps: int):
+                     steps: int, temperature: float = 0.0,
+                     top_k: Optional[int] = None):
         """Run ``steps`` fused decode iterations (one host sync). All array
         args/results are device-side; returns (cache, tok, kv_lens, produced,
-        step_tokens [steps,B], step_active [steps,B], wall_seconds)."""
+        step_tokens [steps,B], step_active [steps,B], wall_seconds).  The
+        sampling key stream (``Engine._sample_key``) advances one split per
+        decode step inside the scan, so results are chunking-invariant."""
         b = int(tokens.shape[0])
-        fn = self._get_decode_chunk(b, steps)
+        fn = self._get_decode_chunk(b, steps, temperature, top_k)
         t0 = time.perf_counter()
-        cache, tok, kv_lens, produced, toks, actives = fn(
-            self.params, cache, tokens, kv_lens, produced, targets)
+        cache, tok, kv_lens, produced, self._sample_key, toks, actives = fn(
+            self.params, cache, tokens, kv_lens, produced, targets,
+            self._sample_key)
         tok = jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
         self.host_syncs += 1
@@ -228,7 +258,9 @@ class Engine:
     # ------------------------------------------------------------------
     def generate(self, prompts: List[np.ndarray], target_tokens: List[int],
                  elastic: bool = False, n_max: Optional[int] = None,
-                 chunk: Optional[int] = None, return_tokens: bool = False):
+                 chunk: Optional[int] = None, return_tokens: bool = False,
+                 temperature: Optional[float] = None,
+                 top_k: Optional[int] = None, seed: Optional[int] = None):
         """Run one batch to completion on the fused chunked-decode loop.
 
         Padded ('dynamic') mode decodes everyone for max(target) steps (the
@@ -236,18 +268,31 @@ class Engine:
         and compacts buckets at chunk boundaries. ``chunk`` overrides
         ``EngineConfig.decode_chunk`` (chunk=1 == the per-step reference
         loop; larger chunks produce identical tokens with O(tokens/chunk)
-        host syncs). Returns dict with per-request completion times (seconds
-        of engine wall time after batch start) and token counts.
+        host syncs). ``temperature``/``top_k`` override the EngineConfig
+        sampling settings (temperature 0 == greedy, the default); the PRNG
+        key is threaded through the fused scan's carry, so sampled tokens
+        are chunk-size invariant for a given ``seed``. Returns dict with
+        per-request completion times (seconds of engine wall time after
+        batch start) and token counts.
         """
         chunk = int(chunk if chunk is not None else self.ecfg.decode_chunk)
         assert chunk >= 1
+        temperature = float(self.ecfg.temperature if temperature is None
+                            else temperature)
+        top_k = self.ecfg.top_k if top_k is None else top_k
+        if seed is not None:
+            self._sample_key = jax.random.PRNGKey(seed)
         targets = np.asarray(target_tokens)
         if n_max is not None:
             targets = np.minimum(targets, n_max)
         nreq = len(prompts)
         syncs0 = self.host_syncs
         cache, kv_lens, last, b, t_prefill = self.prefill_batch(prompts)
-        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        if temperature > 0.0:
+            self._sample_key, sub = jax.random.split(self._sample_key)
+            tok = _sample_tokens(sub, last, temperature, top_k)
+        else:
+            tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         live = np.arange(nreq)
         produced = np.ones(nreq, np.int64)    # first token from prefill
         done_at = np.full(nreq, np.nan)
@@ -288,7 +333,8 @@ class Engine:
             steps = chunk if rem_max >= chunk else 1 << (rem_max.bit_length() - 1)
             prod_d, targ_d = slot_state(b, live)
             cache, tok, kv_lens, prod_d, toks, actives, dt = \
-                self.decode_chunk(cache, kv_lens, tok, prod_d, targ_d, steps)
+                self.decode_chunk(cache, kv_lens, tok, prod_d, targ_d, steps,
+                                  temperature=temperature, top_k=top_k)
             clock += dt
             actives_np = np.asarray(actives)            # [steps, b]
             produced[live] = np.asarray(prod_d)[:len(live)]

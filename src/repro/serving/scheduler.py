@@ -1,8 +1,10 @@
-"""Batch schedulers implementing the paper's serving disciplines.
+"""Virtual-timeline schedulers: a BatchPolicy bound to a ServiceClock.
 
-All schedulers consume a list of ``Request``s (Poisson arrivals, iid output
-token requirements) and drive a *virtual timeline*: the next batch starts at
-max(server_free, trigger), exactly like the event-driven simulator — but the
+Since the batching-policy refactor the serving disciplines themselves live
+in :mod:`repro.core.policies` — ONE definition each of trigger, member
+selection, clipping and service law.  This module binds a policy to a
+*clock* and drives the virtual timeline: the next batch starts at
+max(server_free, trigger), exactly like the reference oracle — but the
 batch duration comes from a ``ServiceClock``, which is either
 
   * ``ModelClock``   — the calibrated BatchLatencyModel (paper-scale
@@ -11,22 +13,33 @@ batch duration comes from a ``ServiceClock``, which is either
                        ground truth; validates that the policy ordering the
                        analytics predict holds on real executables).
 
-Policies:
-  FCFSScheduler            M/G/1 single-request service    (paper §III)
-  DynamicBatchScheduler    batch all waiting (cap b_max)   (paper §IV-A/B)
-  FixedBatchScheduler      wait for exactly b              (paper §IV-C)
-  ElasticBatchScheduler    early-exit batches (Eq 26)      (paper §IV-D)
+``PolicyScheduler(policy, clock)`` is the generic adapter; the named
+scheduler classes are one-line bindings kept for compatibility and
+readability:
+
+  FCFSScheduler            FCFSPolicy      (M/G/1, incl. impatience tau)
+  DynamicBatchScheduler    DynamicPolicy   (paper §IV-A/B)
+  FixedBatchScheduler      FixedPolicy     (paper §IV-C)
+  ElasticBatchScheduler    ElasticPolicy   (paper §IV-D, Eq 26)
+  MultiBinBatchScheduler   MultiBinPolicy  (Guldogan et al. 2024)
   ContinuousBatchScheduler iteration-level refill [beyond paper; Orca-style]
+
+``run_engine_schedule`` executes any batch-formation policy's batches on
+the REAL engine (prefill + fused chunked decode per batch), which is how
+multi-bin batching reaches the engine layer.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
 from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policies import (
+    BatchPolicy, DynamicPolicy, ElasticPolicy, FCFSPolicy, FixedPolicy,
+    MultiBinPolicy)
 from repro.data.pipeline import Request
 
 
@@ -77,7 +90,7 @@ class EngineClock:
 
 
 # ----------------------------------------------------------------------------
-# Schedulers (virtual timeline)
+# Generic policy adapter (virtual timeline)
 # ----------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -89,155 +102,151 @@ class ScheduleResult:
     makespan: float
 
 
-def _clip(reqs, n_max):
-    return [min(r.target_output_tokens, n_max) if n_max else
-            r.target_output_tokens for r in reqs]
+class PolicyScheduler:
+    """Bind a :class:`repro.core.policies.BatchPolicy` to a ServiceClock.
 
+    The policy supplies formation (trigger + members) and per-batch
+    completion semantics (``service_clock``); this adapter only walks the
+    virtual timeline and collects waits / end-to-end latencies."""
 
-class _Base:
-    def __init__(self, clock: ModelClock, n_max: Optional[int] = None,
-                 tau: Optional[float] = None):
+    def __init__(self, policy: BatchPolicy, clock: ModelClock):
+        self.policy = policy
         self.clock = clock
-        self.n_max = n_max
-        self.tau = tau
-
-
-class FCFSScheduler(_Base):
-    """Single-request FCFS: the paper's M/G/1 (§III), incl. impatience."""
 
     def run(self, reqs: List[Request]) -> ScheduleResult:
-        n = len(reqs)
+        pol = self.policy
+        n = pol.schedule_length(len(reqs))
+        arr = np.array([r.arrival for r in reqs[:n]])
+        ns = np.array([pol.clip(r.target_output_tokens) for r in reqs[:n]],
+                      np.float64)
+        tau = getattr(pol, "tau", None)
         waits = np.zeros(n)
         e2e = np.zeros(n)
         lost = np.zeros(n, bool)
+        sizes = []
+        fs = pol.formation(arr, ns)
         t_free = 0.0
-        for i, r in enumerate(reqs):
-            ns = _clip([r], self.n_max)[0]
-            wait = max(0.0, t_free - r.arrival)
-            if self.tau is not None and wait >= self.tau:
-                waits[i] = self.tau
-                lost[i] = True
-                continue
-            svc = self.clock.single_time(ns)
-            waits[i] = wait
-            e2e[i] = wait + svc
-            t_free = r.arrival + wait + svc
-        return ScheduleResult(waits, e2e, lost, [1] * n, t_free)
+        while (nb := fs.next_batch(t_free)) is not None:
+            start, idx = nb
+            w = start - arr[idx]
+            if tau is not None and len(idx) == 1 and w[0] >= tau:
+                waits[idx] = tau        # abandoned: spends tau in queue
+                lost[idx] = True
+                continue                # server never starts this request
+            h, offsets = pol.service_clock(ns[idx], self.clock)
+            waits[idx] = w
+            e2e[idx] = w + offsets
+            sizes.append(len(idx))
+            t_free = start + h
+        return ScheduleResult(waits, e2e, lost, sizes, t_free)
 
 
-class DynamicBatchScheduler(_Base):
+class FCFSScheduler(PolicyScheduler):
+    """Single-request FCFS: the paper's M/G/1 (§III), incl. impatience."""
+
+    def __init__(self, clock, n_max: Optional[int] = None,
+                 tau: Optional[float] = None):
+        super().__init__(FCFSPolicy(n_max=n_max, tau=tau), clock)
+
+
+class DynamicBatchScheduler(PolicyScheduler):
     """Batch everything waiting when the server frees (cap b_max); padded
     decode: the batch runs to its longest member (paper Eq 18)."""
 
     def __init__(self, clock, n_max=None, b_max: Optional[int] = None):
-        super().__init__(clock, n_max)
-        self.b_max = b_max
-
-    def run(self, reqs: List[Request]) -> ScheduleResult:
-        n = len(reqs)
-        arr = np.array([r.arrival for r in reqs])
-        ns = np.array(_clip(reqs, self.n_max), np.float64)
-        waits = np.zeros(n)
-        e2e = np.zeros(n)
-        sizes = []
-        head, t_free = 0, 0.0
-        while head < n:
-            if arr[head] >= t_free:
-                start, hi = arr[head], head + 1
-            else:
-                start = t_free
-                hi = int(np.searchsorted(arr, t_free, side="right"))
-            if self.b_max:
-                hi = min(hi, head + self.b_max)
-            h = self.clock.batch_time(ns[head:hi])
-            waits[head:hi] = start - arr[head:hi]
-            e2e[head:hi] = start + h - arr[head:hi]
-            sizes.append(hi - head)
-            t_free = start + h
-            head = hi
-        return ScheduleResult(waits, e2e, np.zeros(n, bool), sizes, t_free)
+        super().__init__(DynamicPolicy(n_max=n_max, b_max=b_max), clock)
 
 
-class FixedBatchScheduler(_Base):
+class FixedBatchScheduler(PolicyScheduler):
     """Wait until exactly b requests are present (paper §IV-C)."""
 
     def __init__(self, clock, b: int, n_max=None):
-        super().__init__(clock, n_max)
-        self.b = b
-
-    def run(self, reqs: List[Request]) -> ScheduleResult:
-        b = self.b
-        n = (len(reqs) // b) * b
-        arr = np.array([r.arrival for r in reqs[:n]])
-        ns = np.array(_clip(reqs[:n], self.n_max), np.float64)
-        waits = np.zeros(n)
-        e2e = np.zeros(n)
-        t_free = 0.0
-        for head in range(0, n, b):
-            batch_arr = arr[head:head + b]
-            start = max(t_free, batch_arr[-1])
-            h = self.clock.batch_time(ns[head:head + b])
-            waits[head:head + b] = start - batch_arr
-            e2e[head:head + b] = start + h - batch_arr
-            t_free = start + h
-        return ScheduleResult(waits, e2e, np.zeros(n, bool),
-                              [b] * (n // b), t_free)
+        super().__init__(FixedPolicy(b=b, n_max=n_max), clock)
 
 
-class ElasticBatchScheduler(_Base):
+class ElasticBatchScheduler(PolicyScheduler):
     """Paper §IV-D: batch like dynamic batching, but short replies exit
     early (per-request completion via Eq 26) and the batch ends at the
     slowest member's completion."""
 
     def __init__(self, clock, n_max=None, b_max: Optional[int] = None):
-        super().__init__(clock, n_max)
-        self.b_max = b_max
+        super().__init__(ElasticPolicy(n_max=n_max, b_max=b_max), clock)
 
-    def run(self, reqs: List[Request]) -> ScheduleResult:
-        n = len(reqs)
-        arr = np.array([r.arrival for r in reqs])
-        ns = np.array(_clip(reqs, self.n_max), np.float64)
-        waits = np.zeros(n)
-        e2e = np.zeros(n)
-        sizes = []
-        head, t_free = 0, 0.0
-        while head < n:
-            if arr[head] >= t_free:
-                start, hi = arr[head], head + 1
+
+class MultiBinBatchScheduler(PolicyScheduler):
+    """Multi-bin batching (Guldogan et al. 2024): per-bin dynamic batching
+    keyed by (predicted) output length; one shared server picks the bin
+    whose head request arrived earliest."""
+
+    def __init__(self, clock, num_bins: int = 4, edges=None, n_max=None,
+                 b_max: Optional[int] = None):
+        super().__init__(MultiBinPolicy(num_bins=num_bins, edges=edges,
+                                        n_max=n_max, b_max=b_max), clock)
+
+
+# ----------------------------------------------------------------------------
+# Continuous (iteration-level) batching
+# ----------------------------------------------------------------------------
+
+def run_continuous_virtual(arrivals: np.ndarray, tokens: np.ndarray, *,
+                           slots: int, chunk: int,
+                           prefill_time: Callable[[int], float],
+                           decode_step_time: Callable[[int], float]):
+    """The continuous-batching virtual timeline, shared by the scheduler
+    adapter and the reference oracle (``ContinuousPolicy``).
+
+    ``slots`` decode streams run concurrently; a finished slot is refilled
+    immediately from the queue (one prefill joins the running batch).
+    Queue wait ends when the request's prefill starts.  ``chunk`` mirrors
+    the engine's fused decode loop: admission/refill only at chunk
+    boundaries, and a chunk is cut short at the earliest remaining
+    completion while work is queued.  Returns (waits, e2e, makespan)."""
+    n = len(arrivals)
+    waits = np.zeros(n)
+    e2e = np.zeros(n)
+    remaining = {}                 # slot -> tokens_left
+    t = 0.0
+    head = 0
+    while head < n or remaining:
+        # admit (chunk boundary)
+        while head < n and arrivals[head] <= t and len(remaining) < slots:
+            waits[head] = t - arrivals[head]
+            t += prefill_time(1)   # prefill piggybacked
+            remaining[head] = tokens[head]
+            head += 1
+        if not remaining:
+            t = max(t, arrivals[head])
+            continue
+        # one fused chunk of decode iterations for all active slots
+        b = len(remaining)
+        rem = list(remaining.values())
+        steps = min(chunk, min(rem) if head < n else max(rem))
+        steps = max(int(steps), 1)
+        dt_step = decode_step_time(b)
+        done = []
+        for rid in list(remaining):
+            if remaining[rid] <= steps:
+                # completes mid-chunk; the real engine interpolates the
+                # same way from the scan's per-step active mask
+                e2e[rid] = t + remaining[rid] * dt_step - arrivals[rid]
+                done.append(rid)
             else:
-                start = t_free
-                hi = int(np.searchsorted(arr, t_free, side="right"))
-            if self.b_max:
-                hi = min(hi, head + self.b_max)
-            batch_ns = ns[head:hi]
-            comp = self.clock.elastic_times(batch_ns)      # sorted order
-            order = np.argsort(batch_ns, kind="stable")
-            comp_by_req = np.empty(hi - head)
-            comp_by_req[order] = comp
-            waits[head:hi] = start - arr[head:hi]
-            e2e[head:hi] = start + comp_by_req - arr[head:hi]
-            sizes.append(hi - head)
-            t_free = start + comp.max()
-            head = hi
-        return ScheduleResult(waits, e2e, np.zeros(n, bool), sizes, t_free)
+                remaining[rid] -= steps
+        t += steps * dt_step
+        for rid in done:
+            del remaining[rid]
+    return waits, e2e, t
 
 
-class ContinuousBatchScheduler(_Base):
-    """Beyond paper: iteration-level scheduling (Orca/vLLM). ``slots``
-    decode streams run concurrently; a finished slot is refilled immediately
-    from the queue (one prefill joins the running batch). Queue wait ends
-    when the request's prefill starts.
-
-    ``chunk`` mirrors the real engine's fused decode loop
-    (``Engine.decode_chunk``): admission and refill only happen at chunk
-    boundaries, and — like ``serve_continuous`` — a chunk is cut short at
-    the earliest remaining completion while work is queued, so the freed
-    slot refills without idle decode. ``chunk=1`` is the legacy per-step
-    discipline."""
+class ContinuousBatchScheduler:
+    """Beyond paper: iteration-level scheduling (Orca/vLLM).  Thin adapter
+    over :func:`run_continuous_virtual` with the clock's prefill/decode-step
+    laws; ``chunk=1`` is the legacy per-step discipline."""
 
     def __init__(self, clock: ModelClock, slots: int, n_max=None,
                  chunk: int = 1):
-        super().__init__(clock, n_max)
+        self.clock = clock
+        self.n_max = n_max
         self.slots = slots
         assert chunk >= 1
         self.chunk = chunk
@@ -245,41 +254,45 @@ class ContinuousBatchScheduler(_Base):
     def run(self, reqs: List[Request]) -> ScheduleResult:
         n = len(reqs)
         arr = np.array([r.arrival for r in reqs])
-        ns = np.array(_clip(reqs, self.n_max), np.int64)
-        waits = np.zeros(n)
-        e2e = np.zeros(n)
-        remaining = {}                 # slot -> tokens_left
-        t = 0.0
-        head = 0
-        while head < n or remaining:
-            # admit (chunk boundary)
-            while head < n and arr[head] <= t and len(remaining) < self.slots:
-                waits[head] = t - arr[head]
-                t += self.clock.prefill_time(1)   # prefill piggybacked
-                remaining[head] = ns[head]
-                head += 1
-            if not remaining:
-                t = max(t, arr[head])
-                continue
-            # one fused chunk of decode iterations for all active slots
-            b = len(remaining)
-            rem = list(remaining.values())
-            steps = min(self.chunk, min(rem) if head < n else max(rem))
-            steps = max(int(steps), 1)
-            dt_step = self.clock.decode_step_time(b)
-            done = []
-            for rid in list(remaining):
-                if remaining[rid] <= steps:
-                    # completes mid-chunk; the real engine interpolates the
-                    # same way from the scan's per-step active mask
-                    e2e[rid] = t + remaining[rid] * dt_step - arr[rid]
-                    done.append(rid)
-                else:
-                    remaining[rid] -= steps
-            t += steps * dt_step
-            for rid in done:
-                del remaining[rid]
+        ns = np.array([min(r.target_output_tokens, self.n_max) if self.n_max
+                       else r.target_output_tokens for r in reqs], np.int64)
+        waits, e2e, t = run_continuous_virtual(
+            arr, ns, slots=self.slots, chunk=self.chunk,
+            prefill_time=self.clock.prefill_time,
+            decode_step_time=self.clock.decode_step_time)
         return ScheduleResult(waits, e2e, np.zeros(n, bool), [], t)
+
+
+# ----------------------------------------------------------------------------
+# Engine layer: execute a policy's batches on the real engine
+# ----------------------------------------------------------------------------
+
+def run_engine_schedule(policy: BatchPolicy, engine,
+                        reqs: List[Request]) -> ScheduleResult:
+    """Form batches with ``policy`` on the request stream's virtual arrival
+    timeline, but execute each batch on the REAL engine (prefill + fused
+    chunked decode); batch durations are wall-clock seconds.  Works for any
+    batch-formation policy (dynamic, fixed, elastic, multi-bin)."""
+    clock = EngineClock(engine)
+    n = policy.schedule_length(len(reqs))
+    arr = np.array([r.arrival for r in reqs[:n]])
+    ns = np.array([policy.clip(r.target_output_tokens) for r in reqs[:n]],
+                  np.float64)
+    elastic = isinstance(policy, ElasticPolicy)
+    waits = np.zeros(n)
+    e2e = np.zeros(n)
+    sizes = []
+    fs = policy.formation(arr, ns)
+    t_free = 0.0
+    while (nb := fs.next_batch(t_free)) is not None:
+        start, idx = nb
+        comp, total = clock.run_batch([reqs[i] for i in idx], elastic,
+                                      policy.n_max)
+        waits[idx] = start - arr[idx]
+        e2e[idx] = waits[idx] + np.asarray(comp)[:len(idx)]
+        sizes.append(len(idx))
+        t_free = start + total
+    return ScheduleResult(waits, e2e, np.zeros(n, bool), sizes, t_free)
 
 
 def run_schedule(scheduler, reqs: List[Request]) -> ScheduleResult:

@@ -1,0 +1,178 @@
+"""Cross-layer agreement for the unified batching-policy core.
+
+For EVERY policy in the registry (via ``default_policies``):
+  * oracle vs fast simulator: trajectory equality on equal seeds (the two
+    layers sample with the same rng call order, so waits must match to
+    float rounding, not just statistically);
+  * oracle vs analytics: mean-delay agreement at low/medium load, with the
+    acceptance shaped by ``analytic_kind`` — 'exact' closed forms must
+    match tightly, 'bound' must dominate without being vacuous, 'approx'
+    within a loose band;
+  * scheduler adapter vs oracle: same discipline driven through
+    ``PolicyScheduler`` + ``ModelClock`` agrees statistically;
+  * engine layer: ``run_engine_schedule`` executes a policy's batches on
+    the real engine (multi-bin included).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.distributions import UniformTokens
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policies import (
+    REGISTRY, BatchPolicy, ContinuousPolicy, DynamicPolicy, ElasticPolicy,
+    MultiBinPolicy, default_policies, get_policy, policy_from_spec,
+    single_from_batch)
+from repro.core.simulate import simulate_policy
+from repro.core.fastsim import simulate_policy_fast, sweep
+from repro.data.pipeline import make_request_stream
+from repro.serving.metrics import summarize
+from repro.serving.scheduler import ModelClock, run_engine_schedule
+
+UNI = UniformTokens(1000)
+LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+# single-request law = H(1, n), so FCFS sees the same service law on the
+# scheduler layer as the oracle/analytic layers derive from LAT
+CLOCK = ModelClock(single_from_batch(LAT), LAT)
+
+POLICIES = default_policies()
+# (low, medium) arrival rates per policy, inside each stability region
+# (FCFS serves one at a time: E[S] ~ 10.8s => lam < 0.093)
+LAMS = {"fcfs": (0.03, 0.06)}
+_DEFAULT_LAMS = (0.05, 0.2)
+
+
+def _lams(name):
+    return LAMS.get(name, _DEFAULT_LAMS)
+
+
+def test_registry_covers_all_disciplines():
+    assert {"fcfs", "dynamic", "elastic", "fixed", "multibin",
+            "continuous"} <= set(REGISTRY)
+    assert set(REGISTRY) == {type(p).name for p in POLICIES.values()}
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_oracle_vs_fast_trajectory_equal(name):
+    pol = POLICIES[name]
+    n = 3_000 if isinstance(pol, ContinuousPolicy) else 30_000
+    for lam in _lams(name):
+        r = simulate_policy(pol, lam, UNI, LAT, num_requests=n, seed=7)
+        f = simulate_policy_fast(pol, lam, UNI, LAT, num_requests=n, seed=7)
+        np.testing.assert_allclose(f["waits"], r["waits"],
+                                   rtol=1e-6, atol=1e-9)
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_oracle_vs_analytic_mean_delay(name):
+    pol = POLICIES[name]
+    if pol.analytic_kind is None:
+        ana = pol.analytic_delay(_lams(name)[0], UNI, LAT)
+        assert ana is None
+        pytest.skip(f"{name}: no analytic form (by design)")
+    for lam in _lams(name):
+        ana = pol.analytic_delay(lam, UNI, LAT)
+        sim = simulate_policy_fast(pol, lam, UNI, LAT,
+                                   num_requests=150_000, seed=11)
+        mean = sim["mean_wait"]
+        assert np.isfinite(ana)
+        if pol.analytic_kind == "exact":
+            assert abs(ana - mean) / max(mean, 1e-9) < 0.08, (lam, ana, mean)
+        elif pol.analytic_kind == "bound":
+            assert ana >= mean * 0.98, (lam, ana, mean)       # dominates
+            assert ana <= max(mean * 4.0, 1.0), (lam, ana, mean)  # not vacuous
+        else:  # 'approx'
+            assert abs(ana - mean) / max(mean, 1e-9) < 0.35, (lam, ana, mean)
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_scheduler_adapter_matches_oracle(name):
+    pol = POLICIES[name]
+    lam = _lams(name)[1]
+    n = 4_000 if isinstance(pol, ContinuousPolicy) else 30_000
+    reqs = make_request_stream(n, lam=lam, dist=UNI, vocab=100, seed=11)
+    s = summarize(pol.scheduler(CLOCK).run(reqs), warmup_frac=0.1)
+    sim = simulate_policy(pol, lam, UNI, LAT, num_requests=n, seed=11)
+    # independent arrival/token draws => statistical agreement only
+    assert abs(s["mean_wait"] - sim["mean_wait"]) / \
+        max(sim["mean_wait"], 0.1) < 0.15, (s["mean_wait"], sim["mean_wait"])
+
+
+def test_sweep_covers_mixed_policy_kinds():
+    grid = sweep({"dyn": DynamicPolicy(), "ela": ElasticPolicy(),
+                  "fix": get_policy("fixed", b=4),
+                  "mb": MultiBinPolicy(num_bins=4),
+                  "legacy": {"kind": "dynamic", "b_max": 8}},
+                 [0.1, 0.4], UNI, LAT, num_requests=20_000, seed=0)
+    for name, waits in grid.items():
+        assert waits.shape == (2,) and np.isfinite(waits).all(), name
+        assert (waits >= 0).all()
+    # elastic <= dynamic on the same seeds (paper §IV-D)
+    assert (grid["ela"] <= grid["dyn"] * 1.02).all()
+
+
+def test_fcfs_policy_exposes_token_limit_optimum():
+    """policy_opt's closed form behind the policy surface (paper V1)."""
+    from repro.core.distributions import LogNormalTokens
+    from repro.core.latency_model import PAPER_A100_LLAMA2_7B
+    from repro.core.policies import FCFSPolicy
+    n = FCFSPolicy().optimize_n_max(1 / 40, LogNormalTokens(7.0, 0.7),
+                                    PAPER_A100_LLAMA2_7B, theta=119 / 120)
+    assert 1100 <= n <= 2200        # paper §V-B: n_max* ~ 1600
+
+
+def test_policy_from_spec_legacy_kinds():
+    assert isinstance(policy_from_spec({"kind": "elastic", "b_max": 4}),
+                      ElasticPolicy)
+    assert policy_from_spec({"kind": "fixed", "b": 8}).b == 8
+    assert policy_from_spec({"kind": "multibin", "num_bins": 3}).num_bins == 3
+    with pytest.raises(ValueError):
+        policy_from_spec({"kind": "nope"})
+
+
+def test_multibin_beats_padded_dynamic_heavy_tail_high_load():
+    """The Guldogan et al. effect, end-to-end through the policy core:
+    binning by output length rescues padded batching once max-token padding
+    dominates (heavy-tail outputs, Fig-6b latency constants)."""
+    from repro.core.distributions import LogNormalTokens
+    ln = LogNormalTokens(7.0, 0.7)
+    ht = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+    lam = 1.0
+    dyn = simulate_policy_fast(DynamicPolicy(), lam, ln, ht,
+                               num_requests=40_000, seed=15)["mean_wait"]
+    ela = simulate_policy_fast(ElasticPolicy(), lam, ln, ht,
+                               num_requests=40_000, seed=15)["mean_wait"]
+    mb = simulate_policy_fast(MultiBinPolicy(num_bins=4), lam, ln, ht,
+                              num_requests=40_000, seed=15)["mean_wait"]
+    assert mb < 0.1 * dyn           # crushes padded dynamic batching
+    assert ela <= mb                # paper: elastic is still optimal
+
+
+@pytest.fixture(scope="module")
+def engine():
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import Engine, EngineConfig
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-3b"), num_layers=2)
+    return Engine(cfg, EngineConfig(max_batch=4, max_seq=128,
+                                    prompt_bucket=16))
+
+
+@pytest.mark.parametrize("policy", [
+    DynamicPolicy(b_max=4),
+    MultiBinPolicy(edges=(6.0,), b_max=4),
+    ElasticPolicy(b_max=4),
+])
+def test_engine_layer_runs_policy_batches(engine, policy):
+    """Any batch-formation policy executes on the REAL engine: multi-bin
+    works in the engine layer with no policy-specific engine code."""
+    rng = np.random.default_rng(0)
+    reqs = make_request_stream(8, lam=5.0, dist=UNI, vocab=50, seed=2)
+    for r in reqs:                      # keep the smoke model's decode short
+        r.target_output_tokens = int(rng.integers(2, 12))
+    res = run_engine_schedule(policy, engine, reqs)
+    assert np.isfinite(res.waits).all() and (res.waits >= 0).all()
+    assert (res.e2e >= res.waits).all()
+    assert sum(res.batch_sizes) == len(reqs)
+    assert res.makespan > 0
