@@ -15,7 +15,12 @@ Three jobs since the batching-policy refactor:
 3. **Multi-bin batching** (Guldogan et al. 2024): delay vs dynamic /
    capped-dynamic / elastic under the paper's heavy-tail workload
    (lognormal(7, 0.7), Fig-6b latency constants) where max-token padding
-   dominates — the regime multi-bin was designed for."""
+   dominates — the regime multi-bin was designed for.
+4. **PR 3 disciplines** under the same heavy-tail workload: WAIT
+   threshold admission (Dai et al. 2025), SRPT shortest-predicted-first,
+   and multi-bin with load-optimized boundaries
+   (``bulk.optimize_bin_edges``) — recorded as the
+   ``pr3_wait_srpt_multibin`` key of ``BENCH_simulators.json``."""
 
 from __future__ import annotations
 
@@ -30,6 +35,19 @@ if __package__ in (None, ""):          # direct `python bench_....py` run
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.common import emit, emit_bench, timer
+
+
+def _load_check_docs():
+    """The docs gate lives once, in scripts/check_docs.py (not a package);
+    load it by path so this bench and the CI docs job share one
+    implementation."""
+    import importlib.util
+    path = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        "check_docs.py")
+    spec = importlib.util.spec_from_file_location("check_docs", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def _time_reference_loops(lams, uni, lat, n_req):
@@ -64,7 +82,9 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     """Run EVERY registered policy end-to-end (fast simulator + scheduler
     adapter) on a small workload; raise if any discipline broke.  The CI
     benchmark step calls this, so a policy that stops running fails the
-    build."""
+    build.  Also gates the docs: every registered policy must be mentioned
+    in docs/equations.md (same check as scripts/check_docs.py), so a new
+    discipline cannot land undocumented."""
     from repro.core.distributions import UniformTokens
     from repro.core.fastsim import simulate_policy_fast
     from repro.core.latency_model import BatchLatencyModel, LatencyModel
@@ -81,6 +101,8 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     policies = default_policies()
     missing = set(REGISTRY) - {type(p).name for p in policies.values()}
     assert not missing, f"default_policies() misses registered: {missing}"
+    doc_errors = _load_check_docs().check_policy_docs()
+    assert not doc_errors, doc_errors
     out = {}
     for name, pol in policies.items():
         sim = simulate_policy_fast(pol, 0.2, uni, lat,
@@ -133,6 +155,8 @@ def main(quick: bool = False):
             assert abs(fast_waits["ela"][li] - ref_waits[("ela", lam)]) < 1e-6
         derived["sim_speedup_cold"] = t_ref / t_cold
         derived["sim_speedup_warm"] = t_ref / t_warm
+        # keyed under the CURRENT PR: earlier PRs' committed baselines
+        # (pr1_*, pr2_*) must never be overwritten by a re-run
         emit_bench("simulators", {
             "workload": f"{len(perf_lams)} lambdas x (dynamic, elastic), "
                         f"{n_perf} requests each",
@@ -141,7 +165,7 @@ def main(quick: bool = False):
             "fast_sweep_warm_s": t_warm,
             "speedup_cold": t_ref / t_cold,
             "speedup_warm": t_ref / t_warm,
-        }, key="pr2_policy_core")
+        }, key="pr3_policy_core_perf")
 
         # ------ Fig 5 grid on the fast path (oracle-checked above) ------
         if n_req == n_perf and perf_lams == lams:
@@ -185,6 +209,42 @@ def main(quick: bool = False):
         assert mb["multibin4"][hi] < 0.1 * mb["dyn_b32"][hi]
         derived["multibin_vs_elastic_ht_hi"] = float(
             mb["multibin4"][hi] / mb["ela"][hi])
+
+        # ------ PR 3: WAIT / SRPT / optimized multi-bin (heavy tail) ------
+        # same workload; the capped-FCFS batch (dyn_b16) goes unstable at
+        # lam=1 while SRPT's shortest-first membership keeps the padded max
+        # small, WAIT amortizes the per-batch overhead over >= k requests,
+        # and the load-optimized boundaries trim multi-bin's tail bin
+        from repro.core.bulk import optimize_bin_edges
+        from repro.core.policies import SRPTPolicy, WaitPolicy
+        n3 = 30_000 if quick else 60_000
+        opt_edges = tuple(optimize_bin_edges(ln, ht, mb_lams[-1],
+                                             num_bins=4))
+        p3 = {"dyn_b16": DynamicPolicy(b_max=16),
+              "wait_k16": WaitPolicy(k=16),
+              "srpt_b16": SRPTPolicy(b_max=16),
+              "multibin4_opt": MultiBinPolicy(edges=opt_edges)}
+        t0 = time.perf_counter()
+        r3 = sweep(p3, mb_lams, ln, ht, num_requests=n3, seed=15)
+        t3 = time.perf_counter() - t0
+        for li, lam in enumerate(mb_lams):
+            for name in p3:
+                derived[f"{name}_ht_lam{lam}"] = float(r3[name][li])
+        # shortest-first rescues the capped batch at high load...
+        assert r3["srpt_b16"][hi] < 0.1 * r3["dyn_b16"][hi]
+        # ...and load-optimized boundaries don't lose to equal-mass ones
+        assert r3["multibin4_opt"][hi] < mb["multibin4"][hi] * 1.02
+        emit_bench("simulators", {
+            "workload": f"lognormal(7,0.7) heavy tail, lams={mb_lams}, "
+                        f"{n3} requests, Fig-6b latency constants",
+            "policies": {name: repr(pol) for name, pol in p3.items()},
+            "optimized_edges": list(opt_edges),
+            "sweep_s": t3,
+            "mean_wait": {name: [float(v) for v in r3[name]]
+                          for name in p3},
+            "mean_wait_baselines": {name: [float(v) for v in mb[name]]
+                                    for name in mb_pols},
+        }, key="pr3_wait_srpt_multibin")
 
         # scheduler cross-check at lam=0.2
         reqs = make_request_stream(min(n_req, 60_000), lam=0.2, dist=uni,

@@ -2,7 +2,7 @@
 the virtual clock — one loop over the policy registry, no per-policy wiring.
 
   fcfs (M/G/1) | dynamic | dynamic+b_max | fixed b* | elastic | multibin |
-  continuous
+  wait | srpt | continuous
 
 Each policy comes from ``repro.core.policies`` (defined once, shared with
 the oracle/fast simulators and the engine) and is bound to a ``ModelClock``
@@ -24,7 +24,7 @@ from repro.core.distributions import LogNormalTokens
 from repro.core.latency_model import BatchLatencyModel, LatencyModel
 from repro.core.policies import (
     ContinuousPolicy, DynamicPolicy, ElasticPolicy, FCFSPolicy, FixedPolicy,
-    MultiBinPolicy)
+    MultiBinPolicy, SRPTPolicy, WaitPolicy)
 from repro.data.pipeline import make_request_stream
 from repro.serving.metrics import summarize
 from repro.serving.scheduler import ModelClock
@@ -50,6 +50,8 @@ def main():
         f"fixed b={b_star}": FixedPolicy(b=b_star, n_max=n_max),
         "elastic": ElasticPolicy(n_max=n_max),
         "multibin (4 bins)": MultiBinPolicy(num_bins=4, n_max=n_max),
+        f"wait k={b_star} (Dai et al.)": WaitPolicy(k=b_star, n_max=n_max),
+        f"srpt b_max={b_star}": SRPTPolicy(b_max=b_star, n_max=n_max),
         "continuous (beyond paper)": ContinuousPolicy(slots=64, n_max=n_max),
     }
     print(f"lam={lam} req/s, lognormal(7,0.7) clipped at n_max={n_max}, "

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs gate (CI `docs` job): fail if the documentation drifted.
+
+1. Internal links: every relative markdown link in README.md and
+   docs/*.md must point at an existing file (http(s)/mailto and pure
+   anchors are skipped; `path#anchor` checks only the path).
+2. Policy coverage: every policy registered in ``repro.core.policies``
+   must be mentioned in docs/equations.md (backtick-quoted registry name),
+   so a new discipline cannot land undocumented.  The same check runs
+   inside ``benchmarks.bench_batching_policies.registry_coverage``.
+
+Run from the repo root: ``PYTHONPATH=src python scripts/check_docs.py``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return out
+
+
+def check_links() -> list:
+    errors = []
+    for path in doc_files():
+        with open(path) as f:
+            text = f.read()
+        for target in LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_policy_docs() -> list:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.policies import REGISTRY
+    eq = os.path.join(ROOT, "docs", "equations.md")
+    if not os.path.exists(eq):
+        return ["docs/equations.md is missing"]
+    with open(eq) as f:
+        text = f.read()
+    return [f"docs/equations.md: registered policy `{name}` is not "
+            f"documented" for name in sorted(REGISTRY)
+            if f"`{name}`" not in text]
+
+
+def main() -> int:
+    errors = check_links() + check_policy_docs()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        files = len(doc_files())
+        print(f"check_docs: OK ({files} files, links + policy coverage)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,8 +10,13 @@ configuration from the paper's models:
                  when the tail is heavy (paper §IV-C finding), unbounded for
                  light tails
   * ``policy`` — 'elastic' when the engine supports early-exit batching
-                 (minimal delay for every distribution, paper §IV-D),
-                 otherwise 'dynamic'
+                 (minimal delay for every distribution, paper §IV-D);
+                 otherwise 'multibin' for heavy tails (binning by length
+                 recovers most of elastic's win under padded decode,
+                 Guldogan et al. 2024) and 'dynamic' for light tails
+  * ``bin_edges`` — load-dependent multi-bin boundaries
+                 (:func:`repro.core.bulk.optimize_bin_edges`) whenever the
+                 recommended policy is 'multibin'
 
 The serving engine polls ``recommendation()`` between batches; hysteresis
 avoids thrashing.
@@ -29,7 +34,8 @@ import numpy as np
 from repro.core.distributions import EmpiricalTokens, TokenDistribution
 from repro.core.latency_model import BatchLatencyModel, LatencyModel
 from repro.core.policy_opt import optimize_token_limit_v1, optimize_token_limit_v2
-from repro.core.bulk import optimal_fixed_batch, dynamic_batching_bound
+from repro.core.bulk import (
+    optimal_fixed_batch, dynamic_batching_bound, optimize_bin_edges)
 
 
 @dataclasses.dataclass
@@ -40,6 +46,7 @@ class Recommendation:
     heavy_tailed: bool
     lam_hat: float
     details: dict
+    bin_edges: Optional[tuple] = None   # set when policy == 'multibin'
 
 
 def tail_index(dist: TokenDistribution) -> float:
@@ -53,7 +60,8 @@ class AdaptiveController:
                  *, theta: float = 0.95, tau: Optional[float] = None,
                  loss_cost: float = 4.0, elastic_available: bool = True,
                  window: int = 4096, min_samples: int = 64,
-                 heavy_tail_scv: float = 0.5, b_search: int = 64):
+                 heavy_tail_scv: float = 0.5, b_search: int = 64,
+                 num_bins: int = 4):
         self.single_lat = single_lat
         self.batch_lat = batch_lat
         self.theta = theta
@@ -63,6 +71,7 @@ class AdaptiveController:
         self.min_samples = min_samples
         self.heavy_tail_scv = heavy_tail_scv
         self.b_search = b_search
+        self.num_bins = num_bins
         self._tokens = deque(maxlen=window)
         self._arrivals = deque(maxlen=window)
         self._last: Optional[Recommendation] = None
@@ -105,25 +114,46 @@ class AdaptiveController:
                                          self.theta, self.tau, self.loss_cost)
         n_max = ch.n_max
 
-        # batching policy (paper §IV conclusions)
+        # batching policy (paper §IV conclusions + Guldogan et al. 2024)
         clipped = dist.clip(n_max)
         b_max = None
+        policy = "elastic" if self.elastic_available else "dynamic"
         if heavy:
             fb = optimal_fixed_batch(clipped, self.batch_lat, lam,
                                      b_max=self.b_search)
             b_max = fb["b_star"]
-        policy = "elastic" if self.elastic_available else "dynamic"
+            if not self.elastic_available:
+                # padded decode pays the full max-token padding on a heavy
+                # tail: route by predicted length instead (bin_edges below)
+                policy = "multibin"
 
         rec = Recommendation(
             n_max=n_max, b_max=b_max, policy=policy, heavy_tailed=heavy,
             lam_hat=lam,
             details={"scv": scv, "objective": ch.objective,
                      "expected_wait": ch.wait, "loss_frac": ch.loss_frac})
-        # hysteresis: ignore <10% n_max moves
+        # hysteresis: ignore <10% n_max moves (bin_edges revert alongside,
+        # so the recommendation stays internally consistent)
         if (not force and self._last is not None
                 and self._last.n_max and n_max
                 and abs(n_max - self._last.n_max) < 0.1 * self._last.n_max):
             rec = dataclasses.replace(
-                rec, n_max=self._last.n_max, b_max=self._last.b_max)
+                rec, n_max=self._last.n_max, b_max=self._last.b_max,
+                bin_edges=(self._last.bin_edges
+                           if rec.policy == "multibin" else None))
+        if rec.policy == "multibin" and rec.bin_edges is None:
+            # the coordinate descent is the expensive step: reuse the last
+            # edges unless the operating point (n_max, lam) actually moved
+            last = self._last
+            if (last is not None and last.bin_edges is not None
+                    and last.n_max == rec.n_max
+                    and abs(lam - last.lam_hat)
+                    < 0.1 * max(last.lam_hat, 1e-9)):
+                edges = last.bin_edges
+            else:
+                edges = tuple(optimize_bin_edges(
+                    dist.clip(rec.n_max), self.batch_lat, lam,
+                    num_bins=self.num_bins))
+            rec = dataclasses.replace(rec, bin_edges=edges)
         self._last = rec
         return rec

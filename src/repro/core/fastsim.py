@@ -22,6 +22,15 @@ implementation — policies without a compiled twin fall back to the oracle:
     (power-of-two window) range-max for the batch's padded token length.
     One iteration per BATCH, so high-load sweeps cost far fewer steps than
     requests.
+  * ``"wait"``         — WAIT threshold admission (Dai et al. 2025) as a
+    jitted ``lax.while_loop`` over batch events: the trigger is the k-th
+    buffered arrival (or the head's timeout), membership via
+    ``searchsorted``, padding via the shared sparse-table range max.
+  * ``"srpt"``         — shortest-predicted-first batching as a
+    ``lax.while_loop`` over a min-segment-tree keyed by (token, arrival)
+    rank: 'leftmost rank with arrival <= start' is an O(log n) tree
+    descent, so each batch pops its b_max shortest waiting requests in
+    O(b_max log n).
 
 ``sweep(policies, lam_grid, ...)`` is the uniform entry point: every
 (λ, policy) combination whose policy rides the shared ``batch_scan``
@@ -279,6 +288,36 @@ def simulate_fixed_batching_fast(lam: float, b: int,
 
 
 # ----------------------------------------------------------------------------
+# Batch-event loops (multi-bin / WAIT / SRPT): one while_loop step per BATCH
+# ----------------------------------------------------------------------------
+
+def _pow2_rows(values, pad):
+    """Stack ragged rows into a (B, L) array with L the next power of two,
+    padded with ``pad`` (the layout the batch-event kernels index)."""
+    lens = np.array([len(v) for v in values], np.int32)
+    L = max(1 << int(lens.max() - 1).bit_length(), 2)
+    out = np.full((len(values), L), pad)
+    for j, v in enumerate(values):
+        out[j, :lens[j]] = v
+    return out, lens, L
+
+
+def _sparse_max_table(rows: np.ndarray) -> np.ndarray:
+    """Sparse table for O(1) range max: table[k, j, i] = max rows[j, i:i+2^k].
+    Rows must already be power-of-two length (``_pow2_rows``)."""
+    B, L = rows.shape
+    K = int(np.log2(L)) + 1
+    table = np.empty((K, B, L))
+    table[0] = rows
+    for k in range(1, K):
+        s = 1 << (k - 1)
+        table[k, :, :L - s] = np.maximum(table[k - 1, :, :L - s],
+                                         table[k - 1, :, s:])
+        table[k, :, L - s:] = table[k - 1, :, L - s:]
+    return table
+
+
+# ----------------------------------------------------------------------------
 # Multi-bin batching (jitted while_loop over batch events)
 # ----------------------------------------------------------------------------
 
@@ -345,22 +384,10 @@ def _multibin_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
     bins = policy.bin_of(tok, dist)
     B = policy.num_bins
     members = [np.nonzero(bins == j)[0] for j in range(B)]
-    lens = np.array([len(m) for m in members], np.int32)
-    L = max(1 << int(lens.max() - 1).bit_length(), 2)   # pow2-bucketed rows
-    arr_b = np.full((B, L), np.inf)
-    tok_b = np.full((B, L), -np.inf)
-    for j, mem in enumerate(members):
-        arr_b[j, :lens[j]] = arr[mem]
-        tok_b[j, :lens[j]] = tok[mem]
-    # sparse table: table[k, j, i] = max tok over window [i, i + 2^k)
-    K = int(np.log2(L)) + 1
-    table = np.empty((K, B, L))
-    table[0] = tok_b
-    for k in range(1, K):
-        s = 1 << (k - 1)
-        table[k, :, :L - s] = np.maximum(table[k - 1, :, :L - s],
-                                         table[k - 1, :, s:])
-        table[k, :, L - s:] = table[k - 1, :, L - s:]
+    arr_b, lens, L = _pow2_rows([arr[m] for m in members], np.inf)
+    tok_b, _, _ = _pow2_rows([tok[m] for m in members], -np.inf)
+    table = _sparse_max_table(tok_b)     # range max for the batch padding
+    K = table.shape[0]
     b_max = np.int32(policy.b_max if policy.b_max is not None else L)
     with jax.experimental.enable_x64():
         nb, o_bin, o_lo, o_hi, o_start = _multibin_loop(B, L, K, n)(
@@ -377,6 +404,179 @@ def _multibin_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
     for j, mem in enumerate(members):
         sel = o_bin == j
         starts_req[mem] = np.repeat(o_start[sel], (o_hi - o_lo)[sel])
+    waits = starts_req - arr
+    w = _warm(waits)
+    return {
+        "mean_wait": float(w.mean()),
+        "p95_wait": float(np.percentile(w, 95)),
+        "mean_batch": float(n / max(nb, 1)),
+        "waits": w,
+    }
+
+
+# ----------------------------------------------------------------------------
+# WAIT threshold admission (jitted while_loop over batch events)
+# ----------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _wait_loop(L: int, K: int, M: int):
+    """One iteration per WAIT batch: the trigger is the k-th buffered
+    arrival or the head's timeout expiry (whichever first); the batch is
+    everything arrived by start (cap b_max), padded to its token range-max
+    (sparse table)."""
+
+    def run(arr, table, n, k, timeout, b_max, k1, k2, k3, k4):
+        def cond(c):
+            return c[1] < n
+
+        def body(c):
+            t_free, head, nb, o_lo, o_hi, o_start = c
+            kth = arr[jnp.minimum(head + k - 1, n - 1)]
+            trigger = jnp.minimum(kth, arr[head] + timeout)
+            start = jnp.maximum(t_free, trigger)
+            hi = jnp.searchsorted(arr, start, side="right").astype(jnp.int32)
+            hi = jnp.minimum(jnp.minimum(hi, head + b_max), n)
+            m = hi - head
+            kk = jnp.floor(jnp.log2(m.astype(jnp.float64))).astype(jnp.int32)
+            p = jnp.left_shift(jnp.int32(1), kk)
+            rm = jnp.maximum(table[kk, 0, head], table[kk, 0, hi - p])
+            bf = m.astype(jnp.float64)
+            h = k1 * bf + k2 + (k3 * bf + k4) * rm
+            return (start + h, hi, nb + 1, o_lo.at[nb].set(head),
+                    o_hi.at[nb].set(hi), o_start.at[nb].set(start))
+
+        init = (jnp.float64(0.0), jnp.int32(0), jnp.int32(0),
+                jnp.zeros(M, jnp.int32), jnp.zeros(M, jnp.int32),
+                jnp.zeros(M, jnp.float64))
+        t_free, head, nb, o_lo, o_hi, o_start = lax.while_loop(
+            cond, body, init)
+        return nb, o_lo, o_hi, o_start
+
+    return jax.jit(run)
+
+
+@kernel("wait")
+def _wait_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    arr, tok = wl.arrivals, wl.tokens
+    n = len(arr)
+    arr_p, _, L = _pow2_rows([arr], np.inf)
+    tok_p, _, _ = _pow2_rows([tok], -np.inf)
+    table = _sparse_max_table(tok_p)
+    with jax.experimental.enable_x64():
+        nb, o_lo, o_hi, o_start = _wait_loop(L, table.shape[0], n)(
+            jnp.asarray(arr_p[0], jnp.float64),
+            jnp.asarray(table, jnp.float64), jnp.int32(n),
+            jnp.int32(policy.k),
+            jnp.float64(policy.timeout if policy.timeout is not None
+                        else np.inf),
+            jnp.int32(policy.b_max if policy.b_max is not None else L),
+            jnp.float64(lat.k1), jnp.float64(lat.k2),
+            jnp.float64(lat.k3), jnp.float64(lat.k4))
+        nb = int(nb)
+        o_lo = np.asarray(o_lo)[:nb]
+        o_hi = np.asarray(o_hi)[:nb]
+        o_start = np.asarray(o_start)[:nb]
+    waits = np.repeat(o_start, o_hi - o_lo) - arr     # batches are contiguous
+    w = _warm(waits)
+    return {
+        "mean_wait": float(w.mean()),
+        "p95_wait": float(np.percentile(w, 95)),
+        "mean_batch": float(n / max(nb, 1)),
+        "waits": w,
+    }
+
+
+# ----------------------------------------------------------------------------
+# SRPT shortest-predicted-first (jitted while_loop over a min-segment-tree)
+# ----------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _srpt_loop(L: int):
+    """One iteration per SRPT batch.  Requests are laid out in rank order
+    (token count, then arrival); a min-segment-tree over their arrival
+    times (served leaves := +inf) answers 'leftmost rank with arrival <=
+    start' in O(log L), which IS the shortest waiting request.  Each batch
+    pops up to b_max such leaves (1 when the server was idle and the next
+    arrival starts alone, exactly like dynamic batching)."""
+    LOG = L.bit_length() - 1     # tree depth: root 1, leaves [L, 2L)
+
+    def run(tree, tok_rank, n, b_max, k1, k2, k3, k4):
+        def cond(c):
+            return c[4] < n
+
+        def body(c):
+            t_free, tree, starts, nb, served = c
+            root = tree[1]
+            idle = root > t_free
+            start = jnp.where(idle, root, t_free)
+            cap = jnp.where(idle, jnp.int32(1), b_max)
+
+            def pop_cond(s):
+                tr, npop, _, _ = s
+                return (npop < cap) & (tr[1] <= start)
+
+            def pop_body(s):
+                tr, npop, mx, st = s
+
+                def down(_, i):
+                    return jnp.where(tr[2 * i] <= start, 2 * i, 2 * i + 1)
+
+                i = lax.fori_loop(0, LOG, down, jnp.int32(1))
+                st = st.at[i - L].set(start)
+                mx = jnp.maximum(mx, tok_rank[i - L])
+                tr = tr.at[i].set(jnp.inf)
+
+                def up(_, iv):
+                    i2, tr2 = iv
+                    i2 = i2 // 2
+                    return i2, tr2.at[i2].set(
+                        jnp.minimum(tr2[2 * i2], tr2[2 * i2 + 1]))
+
+                _, tr = lax.fori_loop(0, LOG, up, (i, tr))
+                return tr, npop + 1, mx, st
+
+            tree, m, mx, starts = lax.while_loop(
+                pop_cond, pop_body,
+                (tree, jnp.int32(0), jnp.float64(-jnp.inf), starts))
+            bf = m.astype(jnp.float64)
+            h = k1 * bf + k2 + (k3 * bf + k4) * mx
+            return (start + h, tree, starts, nb + 1, served + m)
+
+        init = (jnp.float64(0.0), tree, jnp.zeros(L, jnp.float64),
+                jnp.int32(0), jnp.int32(0))
+        _, _, starts, nb, _ = lax.while_loop(cond, body, init)
+        return starts, nb
+
+    return jax.jit(run)
+
+
+@kernel("srpt")
+def _srpt_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    arr, tok = wl.arrivals, wl.tokens
+    n = len(arr)
+    order = np.argsort(tok, kind="stable")     # rank = (token, arrival)
+    arr_rank, _, L = _pow2_rows([arr[order]], np.inf)
+    tok_rank, _, _ = _pow2_rows([tok[order]], -np.inf)
+    tree = np.full(2 * L, np.inf)
+    tree[L:] = arr_rank[0]
+    lvl, size = arr_rank[0], L
+    while size > 1:
+        lvl = np.minimum(lvl[0::2], lvl[1::2])
+        size //= 2
+        tree[size:2 * size] = lvl
+    with jax.experimental.enable_x64():
+        starts_rank, nb = _srpt_loop(L)(
+            jnp.asarray(tree, jnp.float64),
+            jnp.asarray(tok_rank[0], jnp.float64), jnp.int32(n),
+            jnp.int32(policy.b_max if policy.b_max is not None else L),
+            jnp.float64(lat.k1), jnp.float64(lat.k2),
+            jnp.float64(lat.k3), jnp.float64(lat.k4))
+        nb = int(nb)
+        starts_rank = np.asarray(starts_rank)[:n]
+    starts_req = np.empty(n)
+    starts_req[order] = starts_rank
     waits = starts_req - arr
     w = _warm(waits)
     return {

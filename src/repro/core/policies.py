@@ -37,8 +37,13 @@ Consumers dispatch structurally, never by policy name:
 Adding a discipline is one subclass + ``@register``; it then automatically
 appears in the oracle, the fast sweep, the schedulers, the cross-layer
 agreement tests (``tests/test_policies.py``) and the registry-driven
-benchmarks.  :class:`MultiBinPolicy` (Guldogan et al. 2024) is the first
-policy added this way.
+benchmarks.  :class:`MultiBinPolicy` (Guldogan et al. 2024) was the first
+policy added this way; :class:`WaitPolicy` (threshold admission, Dai et
+al. 2025) and :class:`SRPTPolicy` (shortest-predicted-first) followed.
+``docs/adding_a_policy.md`` walks through the recipe with WAIT and SRPT as
+the worked examples, and ``docs/equations.md`` maps each policy's analytic
+form back to the paper; CI gates that every registered policy is
+documented there.
 """
 
 from __future__ import annotations
@@ -153,6 +158,79 @@ class _MultiBinFormation:
         return start, self.members[j_min][h:hi]
 
 
+class _WaitFormation:
+    """WAIT-style threshold admission (Dai et al. 2025): hold batch
+    formation until at least ``k`` requests are buffered or the head
+    request has waited ``timeout`` seconds; then serve everything that has
+    arrived by the start instant (cap ``b_max``).  Fewer than ``k``
+    requests remaining in the stream are flushed once the last of them has
+    arrived (or the timer fires), so the tail of a finite workload is
+    never stranded."""
+
+    def __init__(self, arrivals: np.ndarray, k: int,
+                 timeout: Optional[float], b_max: Optional[int]):
+        self.arrivals = arrivals
+        self.k = k
+        self.timeout = timeout
+        self.b_max = b_max
+        self.head = 0
+
+    def next_batch(self, t_free: float):
+        arr, head = self.arrivals, self.head
+        n = len(arr)
+        if head >= n:
+            return None
+        trigger = float(arr[min(head + self.k - 1, n - 1)])
+        if self.timeout is not None:
+            trigger = min(trigger, float(arr[head]) + self.timeout)
+        start = max(t_free, trigger)
+        hi = int(np.searchsorted(arr, start, side="right"))
+        if self.b_max:
+            hi = min(hi, head + self.b_max)
+        self.head = hi
+        return start, np.arange(head, hi)
+
+
+class _SRPTFormation:
+    """SRPT-like shortest-predicted-first selection: the waiting room is
+    ordered by (predicted token count, arrival order) and batch formation
+    takes the ``b_max`` shortest waiting requests — preempting FCFS order
+    at formation time (admitted batches are never preempted).  An idle
+    server starts the earliest next arrival, exactly like dynamic
+    batching."""
+
+    def __init__(self, arrivals: np.ndarray, tokens: np.ndarray,
+                 b_max: Optional[int]):
+        self.arrivals = arrivals
+        self.tokens = tokens
+        self.b_max = b_max
+        self.head = 0
+        self.heap: List = []
+
+    def _admit(self, t: float):
+        import heapq
+        arr, tok, n = self.arrivals, self.tokens, len(self.arrivals)
+        while self.head < n and arr[self.head] <= t:
+            heapq.heappush(self.heap, (float(tok[self.head]), self.head))
+            self.head += 1
+
+    def next_batch(self, t_free: float):
+        import heapq
+        self._admit(t_free)
+        if not self.heap:
+            if self.head >= len(self.arrivals):
+                return None
+            start = float(self.arrivals[self.head])
+            self._admit(start)
+            cap = 1                       # idle server: next arrival alone
+        else:
+            start = t_free
+            cap = self.b_max if self.b_max else len(self.heap)
+        take = min(cap, len(self.heap))
+        idx = np.array([heapq.heappop(self.heap)[1] for _ in range(take)])
+        return start, idx
+
+
 # ----------------------------------------------------------------------------
 # BatchPolicy protocol + registry
 # ----------------------------------------------------------------------------
@@ -179,7 +257,8 @@ def policy_from_spec(spec: dict) -> "BatchPolicy":
 
 
 def default_policies(b: int = 4, b_max: Optional[int] = 8,
-                     num_bins: int = 4) -> Dict[str, "BatchPolicy"]:
+                     num_bins: int = 4, wait_k: int = 8,
+                     srpt_b: int = 8) -> Dict[str, "BatchPolicy"]:
     """One representative instance per registered discipline — the set the
     cross-layer agreement tests and the registry-driven benchmarks iterate."""
     return {
@@ -189,6 +268,8 @@ def default_policies(b: int = 4, b_max: Optional[int] = 8,
         "elastic": ElasticPolicy(),
         f"fixed_b{b}": FixedPolicy(b=b),
         f"multibin_{num_bins}": MultiBinPolicy(num_bins=num_bins),
+        f"wait_k{wait_k}": WaitPolicy(k=wait_k),
+        f"srpt_b{srpt_b}": SRPTPolicy(b_max=srpt_b),
         "continuous": ContinuousPolicy(slots=16),
     }
 
@@ -465,7 +546,7 @@ class MultiBinPolicy(BatchPolicy):
 
     name = "multibin"
     fast_kernel = "multibin"
-    analytic_kind = None          # ROADMAP: per-bin Inoue-style bound
+    analytic_kind = "bound"       # two-arm envelope, see bulk.multibin_bound
 
     def __init__(self, num_bins: int = 4,
                  edges: Optional[Sequence[float]] = None,
@@ -475,6 +556,11 @@ class MultiBinPolicy(BatchPolicy):
         self.num_bins = int(num_bins if edges is None else len(edges) + 1)
         self.edges = None if edges is None else tuple(float(e) for e in edges)
         self.b_max = b_max
+        if b_max is not None:
+            # both bound arms assume serve-all-waiting within the picked
+            # bin; a batch cap lowers throughput, so neither arm dominates
+            # the capped system
+            self.analytic_kind = None
 
     def bin_edges(self, dist: Optional[TokenDistribution],
                   tokens: Optional[np.ndarray] = None) -> np.ndarray:
@@ -500,6 +586,90 @@ class MultiBinPolicy(BatchPolicy):
     def formation(self, arrivals, tokens, dist=None):
         return _MultiBinFormation(arrivals, self.bin_of(tokens, dist),
                                   self.num_bins, self.b_max)
+
+    def batch_time(self, ns, lat) -> float:
+        return float(lat.batch_time(len(ns), ns.max()))
+
+    def analytic_delay(self, lam, dist, lat) -> Optional[float]:
+        from repro.core.bulk import multibin_bound
+        if self.b_max is not None:
+            return None
+        d = dist if self.n_max is None else dist.clip(self.n_max)
+        return multibin_bound(d, lat, lam, self.bin_edges(d))["wait_bound"]
+
+    @classmethod
+    def optimized(cls, lam: float, dist: TokenDistribution, lat,
+                  num_bins: int = 4, **kwargs) -> "MultiBinPolicy":
+        """Load-dependent boundaries (Guldogan et al. 2024) instead of the
+        default equal-probability-mass quantiles; see
+        :func:`repro.core.bulk.optimize_bin_edges`."""
+        from repro.core.bulk import optimize_bin_edges
+        edges = optimize_bin_edges(dist, lat, lam, num_bins=num_bins)
+        return cls(edges=tuple(edges), **kwargs)
+
+
+@register
+class WaitPolicy(BatchPolicy):
+    """WAIT-style threshold admission (Dai et al. 2025): hold batch
+    formation until at least ``k`` requests are buffered or the head
+    request has waited ``timeout`` seconds, then serve everything that has
+    arrived (cap ``b_max``) with padded decode.  Holding trades queueing
+    delay at low load for throughput at high load: formed batches amortize
+    the per-batch overhead ``k1*b + k2`` and the padded decode over at
+    least ``k`` requests, which is the mechanism behind the policy's
+    heavy-traffic throughput optimality in Dai et al.  ``timeout=None`` is
+    the pure threshold rule (the end of a finite stream still flushes the
+    last ``< k`` stragglers).  No closed-form mean delay is known (Dai et
+    al. prove throughput optimality, not a delay formula), so
+    ``analytic_kind`` stays None."""
+
+    name = "wait"
+    fast_kernel = "wait"
+
+    def __init__(self, k: int = 8, timeout: Optional[float] = None,
+                 n_max: Optional[int] = None, b_max: Optional[int] = None):
+        super().__init__(n_max)
+        assert k >= 1
+        self.k = int(k)
+        self.timeout = timeout
+        self.b_max = b_max
+
+    def formation(self, arrivals, tokens, dist=None):
+        return _WaitFormation(arrivals, self.k, self.timeout, self.b_max)
+
+    def batch_time(self, ns, lat) -> float:
+        return float(lat.batch_time(len(ns), ns.max()))
+
+
+@register
+class SRPTPolicy(BatchPolicy):
+    """SRPT-like shortest-predicted-first batching: the waiting room is
+    ordered by predicted output length and batch formation takes the
+    ``b_max`` shortest waiting requests (padded decode), preempting FCFS
+    order at formation time — running batches are never preempted, which
+    is what a serving engine can actually implement.  Short replies stop
+    queueing behind long ones AND the selected batch is length-homogeneous,
+    so the ``H[b, max]`` padding waste shrinks like multi-bin batching's.
+
+    The predictor here is an oracle (the true sampled token count, after
+    ``n_max`` clipping); a real deployment would plug in a learned
+    length predictor.  With ``b_max=None`` every waiting request is
+    served, and membership degenerates to dynamic batching (order inside
+    a padded batch is irrelevant) — so the discipline defaults to a finite
+    cap.  No exact mean-delay formula is known for batched SRPT (classic
+    SRPT analysis is per-request preemptive), so ``analytic_kind`` stays
+    None."""
+
+    name = "srpt"
+    fast_kernel = "srpt"
+
+    def __init__(self, b_max: Optional[int] = 8,
+                 n_max: Optional[int] = None):
+        super().__init__(n_max)
+        self.b_max = b_max
+
+    def formation(self, arrivals, tokens, dist=None):
+        return _SRPTFormation(arrivals, tokens, self.b_max)
 
     def batch_time(self, ns, lat) -> float:
         return float(lat.batch_time(len(ns), ns.max()))
@@ -530,7 +700,7 @@ class ContinuousPolicy(BatchPolicy):
 
 __all__ = [
     "BatchPolicy", "ContinuousPolicy", "DynamicPolicy", "ElasticPolicy",
-    "FCFSPolicy", "FixedPolicy", "MultiBinPolicy", "REGISTRY", "Workload",
-    "default_policies", "get_policy", "policy_from_spec", "register",
-    "single_from_batch",
+    "FCFSPolicy", "FixedPolicy", "MultiBinPolicy", "REGISTRY", "SRPTPolicy",
+    "WaitPolicy", "Workload", "default_policies", "get_policy",
+    "policy_from_spec", "register", "single_from_batch",
 ]

@@ -8,9 +8,10 @@ drive a policy on a sampled workload:
   * ``_oracle_mg1``        — single-server Lindley / workload recursion
     (FCFS with optional deterministic impatience tau; paper Figs 4a-4c)
   * ``_oracle_batches``    — the generic batch-formation loop shared by
-    dynamic, fixed, elastic and multi-bin batching (paper Figs 5-6; the
-    policy's ``formation()`` supplies trigger+membership, its
-    ``batch_time()`` the service law)
+    dynamic, fixed, elastic, multi-bin, WAIT and SRPT batching (paper
+    Figs 5-6; the policy's ``formation()`` supplies trigger+membership,
+    its ``batch_time()`` the service law — WAIT and SRPT needed zero new
+    oracle code)
   * ``_oracle_continuous`` — iteration-level slot refill on a virtual
     clock (beyond paper; mirrors the engine's fused chunked decode)
 

@@ -2,6 +2,7 @@ from repro.serving.engine import Engine, EngineConfig
 from repro.serving.scheduler import (
     FCFSScheduler, DynamicBatchScheduler, FixedBatchScheduler,
     ElasticBatchScheduler, ContinuousBatchScheduler, MultiBinBatchScheduler,
+    WaitBatchScheduler, SRPTBatchScheduler,
     PolicyScheduler, run_engine_schedule, run_schedule,
 )
 from repro.serving.metrics import summarize
@@ -11,8 +12,8 @@ __all__ = [
     "Engine", "EngineConfig",
     "FCFSScheduler", "DynamicBatchScheduler", "FixedBatchScheduler",
     "ElasticBatchScheduler", "ContinuousBatchScheduler",
-    "MultiBinBatchScheduler", "PolicyScheduler", "run_engine_schedule",
-    "run_schedule",
+    "MultiBinBatchScheduler", "WaitBatchScheduler", "SRPTBatchScheduler",
+    "PolicyScheduler", "run_engine_schedule", "run_schedule",
     "summarize",
     "serve_continuous", "splice_cache",
 ]

@@ -22,6 +22,8 @@ readability:
   FixedBatchScheduler      FixedPolicy     (paper §IV-C)
   ElasticBatchScheduler    ElasticPolicy   (paper §IV-D, Eq 26)
   MultiBinBatchScheduler   MultiBinPolicy  (Guldogan et al. 2024)
+  WaitBatchScheduler       WaitPolicy      (threshold admission, Dai et al.)
+  SRPTBatchScheduler       SRPTPolicy      (shortest-predicted-first)
   ContinuousBatchScheduler iteration-level refill [beyond paper; Orca-style]
 
 ``run_engine_schedule`` executes any batch-formation policy's batches on
@@ -39,7 +41,7 @@ import numpy as np
 from repro.core.latency_model import BatchLatencyModel, LatencyModel
 from repro.core.policies import (
     BatchPolicy, DynamicPolicy, ElasticPolicy, FCFSPolicy, FixedPolicy,
-    MultiBinPolicy)
+    MultiBinPolicy, SRPTPolicy, WaitPolicy)
 from repro.data.pipeline import Request
 
 
@@ -182,6 +184,24 @@ class MultiBinBatchScheduler(PolicyScheduler):
                  b_max: Optional[int] = None):
         super().__init__(MultiBinPolicy(num_bins=num_bins, edges=edges,
                                         n_max=n_max, b_max=b_max), clock)
+
+
+class WaitBatchScheduler(PolicyScheduler):
+    """WAIT threshold admission (Dai et al. 2025): hold batch formation
+    until k requests are buffered or the head has waited ``timeout``."""
+
+    def __init__(self, clock, k: int = 8, timeout: Optional[float] = None,
+                 n_max=None, b_max: Optional[int] = None):
+        super().__init__(WaitPolicy(k=k, timeout=timeout, n_max=n_max,
+                                    b_max=b_max), clock)
+
+
+class SRPTBatchScheduler(PolicyScheduler):
+    """SRPT-like shortest-predicted-first batch formation: the ``b_max``
+    shortest waiting requests form the next batch."""
+
+    def __init__(self, clock, b_max: Optional[int] = 8, n_max=None):
+        super().__init__(SRPTPolicy(b_max=b_max, n_max=n_max), clock)
 
 
 # ----------------------------------------------------------------------------

@@ -1,0 +1,112 @@
+"""Load-dependent multi-bin boundary optimization (Guldogan et al. 2024)
+and its wiring into the adaptive controller.
+
+``optimize_bin_edges`` replaces the equal-probability-mass quantile
+boundaries with load-dependent ones: the arrival rate fixes an effective
+per-bin batch size b(lam), and coordinate descent minimizes the saturated
+per-request service time sbar(edges; b) (reciprocal of service capacity).
+"""
+
+import numpy as np
+
+from repro.core.bulk import (
+    multibin_bound, multibin_saturated_service, multibin_split,
+    optimize_bin_edges)
+from repro.core.distributions import LogNormalTokens, UniformTokens
+from repro.core.latency_model import BatchLatencyModel
+from repro.core.policies import MultiBinPolicy
+
+LN = LogNormalTokens(7.0, 0.7)
+HT = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)   # Fig-6b consts
+
+
+def _quantile_edges(dist, num_bins=4):
+    return MultiBinPolicy(num_bins=num_bins).bin_edges(dist)
+
+
+def test_split_partitions_the_distribution():
+    parts = multibin_split(LN, _quantile_edges(LN))
+    ps = [p for p, _, _ in parts]
+    assert abs(sum(ps) - 1.0) < 1e-12
+    assert all(abs(p - 0.25) < 0.02 for p in ps)    # equal-mass quantiles
+    pads = [pad for _, _, pad in parts]
+    assert pads == sorted(pads)
+    for p, d, pad in parts:
+        if p > 0:
+            assert d.support[d.pmf > 0].max() <= pad
+
+
+def test_optimized_edges_ascending_and_inside_support():
+    for lam in (0.5, 1.0, 2.0):
+        e = optimize_bin_edges(LN, HT, lam, num_bins=4)
+        assert len(e) == 3
+        assert (np.diff(e) > 0).all()
+        assert 0 < e[0] and e[-1] < LN.max_tokens
+
+
+def test_optimized_edges_improve_saturated_service():
+    """Never worse than the quantile default on the objective (descent
+    starts there), strictly better under heavy tail at high load."""
+    q = _quantile_edges(LN)
+    e = optimize_bin_edges(LN, HT, 1.0, num_bins=4)
+    for b in (8, 16, 32):
+        sq = multibin_saturated_service(LN, HT, q, b)
+        se = multibin_saturated_service(LN, HT, e, b)
+        assert se <= sq + 1e-12
+    assert multibin_saturated_service(LN, HT, e, 16) < \
+        0.95 * multibin_saturated_service(LN, HT, q, 16)
+
+
+def test_edges_are_load_dependent():
+    """Light load: b(lam)=1, sbar telescopes to the global mean and the
+    quantile start is returned unchanged.  Heavy load: the per-bin batch
+    maxima dominate and the boundaries move."""
+    q = _quantile_edges(LN)
+    np.testing.assert_allclose(optimize_bin_edges(LN, HT, 0.01), q)
+    assert not np.allclose(optimize_bin_edges(LN, HT, 1.0), q)
+
+
+def test_optimized_edges_improve_simulated_delay_high_load():
+    from repro.core.fastsim import simulate_policy_fast
+    lam = 1.0
+    quant = simulate_policy_fast(MultiBinPolicy(num_bins=4), lam, LN, HT,
+                                 num_requests=40_000, seed=15)["mean_wait"]
+    opt = simulate_policy_fast(
+        MultiBinPolicy.optimized(lam, LN, HT, num_bins=4), lam, LN, HT,
+        num_requests=40_000, seed=15)["mean_wait"]
+    assert opt < quant * 1.02, (opt, quant)
+
+
+def test_multibin_bound_uses_explicit_edges():
+    uni = UniformTokens(1000)
+    lat = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+    d = multibin_bound(uni, lat, 0.2, [250.0, 500.0, 750.0])
+    assert d["stable"] and np.isfinite(d["wait_bound"])
+    # the round arm pays every bin's per-batch overhead once
+    assert abs(d["beta"] - (4 * 0.5 + 0.02 * (250 + 500 + 750 + 1000))) < 1e-9
+    assert abs(d["alpha"] - (0.05 + 0.0005 * 1000)) < 1e-12
+
+
+def test_controller_recommends_optimized_multibin_without_elastic():
+    from repro.core.control import AdaptiveController
+    from repro.core.latency_model import PAPER_A100_LLAMA2_7B
+    rng = np.random.default_rng(0)
+    ctrl = AdaptiveController(PAPER_A100_LLAMA2_7B, HT, theta=119 / 120,
+                              elastic_available=False, min_samples=64)
+    t = 0.0
+    for n in LN.sample(rng, 512):
+        t += rng.exponential(1.0)        # heavy load: lam_hat ~ 1
+        ctrl.observe_arrival(t)
+        ctrl.observe_completion(int(n))
+    rec = ctrl.recommendation(force=True)
+    assert rec.heavy_tailed
+    assert rec.policy == "multibin"
+    assert rec.bin_edges is not None and len(rec.bin_edges) == 3
+    assert (np.diff(rec.bin_edges) > 0).all()
+    # elastic engines keep the paper's optimal policy; no edges computed
+    ctrl2 = AdaptiveController(PAPER_A100_LLAMA2_7B, HT, theta=119 / 120,
+                               elastic_available=True, min_samples=64)
+    ctrl2._tokens = ctrl._tokens
+    ctrl2._arrivals = ctrl._arrivals
+    rec2 = ctrl2.recommendation(force=True)
+    assert rec2.policy == "elastic" and rec2.bin_edges is None

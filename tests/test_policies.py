@@ -23,8 +23,8 @@ from repro.core.distributions import UniformTokens
 from repro.core.latency_model import BatchLatencyModel, LatencyModel
 from repro.core.policies import (
     REGISTRY, BatchPolicy, ContinuousPolicy, DynamicPolicy, ElasticPolicy,
-    MultiBinPolicy, default_policies, get_policy, policy_from_spec,
-    single_from_batch)
+    MultiBinPolicy, SRPTPolicy, WaitPolicy, default_policies, get_policy,
+    policy_from_spec, single_from_batch)
 from repro.core.simulate import simulate_policy
 from repro.core.fastsim import simulate_policy_fast, sweep
 from repro.data.pipeline import make_request_stream
@@ -50,7 +50,7 @@ def _lams(name):
 
 def test_registry_covers_all_disciplines():
     assert {"fcfs", "dynamic", "elastic", "fixed", "multibin",
-            "continuous"} <= set(REGISTRY)
+            "wait", "srpt", "continuous"} <= set(REGISTRY)
     assert set(REGISTRY) == {type(p).name for p in POLICIES.values()}
 
 
@@ -104,6 +104,7 @@ def test_sweep_covers_mixed_policy_kinds():
     grid = sweep({"dyn": DynamicPolicy(), "ela": ElasticPolicy(),
                   "fix": get_policy("fixed", b=4),
                   "mb": MultiBinPolicy(num_bins=4),
+                  "wait": WaitPolicy(k=4), "srpt": SRPTPolicy(b_max=8),
                   "legacy": {"kind": "dynamic", "b_max": 8}},
                  [0.1, 0.4], UNI, LAT, num_requests=20_000, seed=0)
     for name, waits in grid.items():
@@ -150,6 +151,91 @@ def test_multibin_beats_padded_dynamic_heavy_tail_high_load():
     assert ela <= mb                # paper: elastic is still optimal
 
 
+@pytest.mark.parametrize("pol", [
+    WaitPolicy(k=8, timeout=10.0),
+    WaitPolicy(k=8, b_max=4),
+    WaitPolicy(k=50, timeout=5.0, b_max=16),
+    SRPTPolicy(b_max=3),
+    SRPTPolicy(b_max=8, n_max=500),
+], ids=repr)
+def test_wait_srpt_variant_trajectories_equal(pol):
+    """The timeout / b_max / n_max arms of the WAIT and SRPT kernels exist
+    in both the oracle formation and the jitted kernel; pin them
+    trajectory-equal (the default-instance suite above only covers the
+    plain parameterizations)."""
+    for lam in (0.05, 0.2):
+        r = simulate_policy(pol, lam, UNI, LAT, num_requests=15_000, seed=7)
+        f = simulate_policy_fast(pol, lam, UNI, LAT,
+                                 num_requests=15_000, seed=7)
+        np.testing.assert_allclose(f["waits"], r["waits"],
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_multibin_analytic_bound_dominates_simulation():
+    """The two-arm envelope bound (bulk.multibin_bound): dominates the
+    simulator across loads, with the singleton-padding arm active at low
+    load and the clearing-round arm at high load."""
+    from repro.core.bulk import multibin_bound
+    pol = MultiBinPolicy(num_bins=4)
+    assert pol.analytic_kind == "bound"
+    edges = pol.bin_edges(UNI)
+    for lam in (0.05, 0.1, 0.4, 0.8):
+        sim = simulate_policy_fast(pol, lam, UNI, LAT,
+                                   num_requests=120_000, seed=11)
+        d = multibin_bound(UNI, LAT, lam, edges)
+        assert d["stable"]
+        assert np.isfinite(d["wait_bound"])
+        assert d["wait_bound"] >= sim["mean_wait"] * 0.98, (lam, d, sim)
+        assert d["wait_bound"] <= max(sim["mean_wait"] * 4.0, 1.0), (lam, d)
+    # a batch cap breaks the serve-all-waiting envelope: no analytic form
+    assert MultiBinPolicy(num_bins=4, b_max=8).analytic_kind is None
+    assert MultiBinPolicy(num_bins=4, b_max=8).analytic_delay(
+        0.2, UNI, LAT) is None
+
+
+def test_wait_threshold_holds_and_amortizes():
+    """WAIT (Dai et al. 2025): holding until k are buffered forms batches
+    of >= k (up to end-of-stream stragglers), paying queueing delay at low
+    load for amortized service."""
+    lam = 0.05
+    dyn = simulate_policy_fast(DynamicPolicy(), lam, UNI, LAT,
+                               num_requests=20_000, seed=3)
+    wait = simulate_policy_fast(WaitPolicy(k=8), lam, UNI, LAT,
+                                num_requests=20_000, seed=3)
+    assert wait["mean_batch"] >= 7.9          # ~every batch holds k=8
+    assert wait["mean_wait"] > dyn["mean_wait"]   # holding is not free
+    # the head of each batch waits at least until the k-th arrival: with
+    # lam=0.05 that alone is (k-1)/(2*lam) ~ 70s on average
+    assert wait["mean_wait"] > 30.0
+
+
+def test_wait_timeout_caps_holding():
+    """The timer arm of the WAIT trigger: a head request never holds the
+    batch longer than ``timeout`` at low load."""
+    lam = 0.05
+    pure = simulate_policy_fast(WaitPolicy(k=50), lam, UNI, LAT,
+                                num_requests=20_000, seed=5)
+    timed = simulate_policy_fast(WaitPolicy(k=50, timeout=10.0), lam, UNI,
+                                 LAT, num_requests=20_000, seed=5)
+    assert timed["mean_wait"] < 0.2 * pure["mean_wait"]
+
+
+def test_srpt_beats_fcfs_order_on_heavy_tail():
+    """Shortest-predicted-first: under a heavy tail and a batch cap, the
+    capped batch of SHORTEST waiting requests both de-queues short replies
+    early and shrinks the padded max — mean delay drops vs FCFS-ordered
+    dynamic batching with the same cap."""
+    from repro.core.distributions import LogNormalTokens
+    ln = LogNormalTokens(7.0, 0.7)
+    ht = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+    lam, b = 0.6, 16
+    dyn = simulate_policy_fast(DynamicPolicy(b_max=b), lam, ln, ht,
+                               num_requests=40_000, seed=9)["mean_wait"]
+    srpt = simulate_policy_fast(SRPTPolicy(b_max=b), lam, ln, ht,
+                                num_requests=40_000, seed=9)["mean_wait"]
+    assert srpt < dyn, (srpt, dyn)
+
+
 @pytest.fixture(scope="module")
 def engine():
     from repro.configs import get_smoke_config
@@ -163,6 +249,8 @@ def engine():
     DynamicPolicy(b_max=4),
     MultiBinPolicy(edges=(6.0,), b_max=4),
     ElasticPolicy(b_max=4),
+    WaitPolicy(k=3, b_max=4),
+    SRPTPolicy(b_max=4),
 ])
 def test_engine_layer_runs_policy_batches(engine, policy):
     """Any batch-formation policy executes on the REAL engine: multi-bin
