@@ -83,12 +83,17 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     adapter) on a small workload; raise if any discipline broke.  The CI
     benchmark step calls this, so a policy that stops running fails the
     build.  Also gates the docs: every registered policy must be mentioned
-    in docs/equations.md (same check as scripts/check_docs.py), so a new
-    discipline cannot land undocumented."""
+    in docs/equations.md and every registered length predictor in
+    docs/predictors.md (same checks as scripts/check_docs.py), so a new
+    discipline or predictor cannot land undocumented.  Every registered
+    predictor additionally runs end-to-end behind SRPT membership (the
+    most prediction-sensitive discipline) on both the fast simulator and
+    the scheduler adapter."""
     from repro.core.distributions import UniformTokens
     from repro.core.fastsim import simulate_policy_fast
     from repro.core.latency_model import BatchLatencyModel, LatencyModel
-    from repro.core.policies import REGISTRY, default_policies
+    from repro.core.policies import REGISTRY, SRPTPolicy, default_policies
+    from repro.core.predictors import PREDICTORS, LearnedPredictor
     from repro.data.pipeline import make_request_stream
     from repro.serving.metrics import summarize
     from repro.serving.scheduler import ModelClock
@@ -101,7 +106,8 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     policies = default_policies()
     missing = set(REGISTRY) - {type(p).name for p in policies.values()}
     assert not missing, f"default_policies() misses registered: {missing}"
-    doc_errors = _load_check_docs().check_policy_docs()
+    docs = _load_check_docs()
+    doc_errors = docs.check_policy_docs() + docs.check_predictor_docs()
     assert not doc_errors, doc_errors
     out = {}
     for name, pol in policies.items():
@@ -113,6 +119,17 @@ def registry_coverage(n_req: int = 4_000) -> dict:
         ana = pol.analytic_delay(0.2, uni, lat)
         out[name] = {"sim": sim["mean_wait"], "sched": sch["mean_wait"],
                      "analytic": ana}
+    for pname, pcls in PREDICTORS.items():
+        pred = (LearnedPredictor().fit(uni, num_train=4_000, seed=0)
+                if pcls is LearnedPredictor else pcls())
+        pol = SRPTPolicy(b_max=8, predictor=pred)
+        sim = simulate_policy_fast(pol, 0.2, uni, lat,
+                                   num_requests=n_req, seed=3)
+        sch = summarize(pol.scheduler(clock).run(reqs))
+        assert np.isfinite(sim["mean_wait"]), (pname, "fast sim")
+        assert np.isfinite(sch["mean_wait"]), (pname, "scheduler")
+        out[f"predictor:{pname}"] = {"sim": sim["mean_wait"],
+                                     "sched": sch["mean_wait"]}
     return out
 
 

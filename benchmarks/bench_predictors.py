@@ -1,0 +1,144 @@
+"""PR 4: prediction-noise robustness of length-aware batching.
+
+The SRPT and multi-bin wins measured in ``bench_batching_policies`` assume
+the output length is knowable (an oracle predictor).  This bench quantifies
+how those wins erode as the predictor degrades, under the paper's
+heavy-tail workload (lognormal(7, 0.7) outputs, Fig-6b latency constants):
+
+1. **Degradation curves**: mean wait over the (λ, σ) plane for SRPT and
+   multi-bin driven by a multiplicative lognormal predictor of noise σ
+   (``fastsim.sweep_noise``; the SRPT cells run as lanes of one vmapped
+   batch-event loop).  WAIT threshold admission rides along as the
+   control: its membership never reads lengths, so its curve must be flat
+   in σ — any slope would mean the predictor column leaked somewhere it
+   shouldn't.
+2. **Learned head vs raw noisy observation**: a ridge head combining
+   several noisy prompt-feature views (``predictors.LearnedPredictor``)
+   against a single observation at the same per-feature noise
+   (``lognormal_noise`` at σ = feature_noise) — lower log-RMSE and lower
+   SRPT delay at matched observation error.
+3. The σ=0 column must reproduce the oracle numbers exactly (same
+   workload rng; the predictor stream is salted separately).
+
+Recorded as the ``pr4_predictors`` key of ``BENCH_simulators.json``
+(``emit_bench(..., key=...)`` — earlier PRs' keys are never replaced).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):          # direct `python bench_....py` run
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, emit_bench, timer
+
+
+def main(quick: bool = False):
+    from repro.core.distributions import LogNormalTokens
+    from repro.core.fastsim import simulate_policy_fast, sweep_noise
+    from repro.core.latency_model import BatchLatencyModel
+    from repro.core.policies import MultiBinPolicy, SRPTPolicy, WaitPolicy
+    from repro.core.predictors import (
+        LearnedPredictor, LogNormalNoisePredictor, prediction_log_rmse)
+
+    ln = LogNormalTokens(7.0, 0.7)
+    ht = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+    lams = [0.6, 1.0]
+    sigmas = [0.0, 0.25, 0.5, 1.0, 1.5]
+    n_req = 12_000 if quick else 30_000
+    seed = 15
+
+    derived = {}
+    with timer() as t_all:
+        # ------ SRPT: vmapped (λ, σ) lanes of one batch-event loop ------
+        t0 = time.perf_counter()
+        srpt = sweep_noise(
+            lambda s: SRPTPolicy(b_max=16,
+                                 predictor=LogNormalNoisePredictor(s)),
+            lams, sigmas, ln, ht, num_requests=n_req, seed=seed)
+        t_srpt = time.perf_counter() - t0
+
+        # ------ multi-bin: per-cell kernel dispatch (ragged bins) ------
+        mb = sweep_noise(
+            lambda s: MultiBinPolicy(num_bins=4,
+                                     predictor=LogNormalNoisePredictor(s)),
+            lams, sigmas, ln, ht, num_requests=n_req, seed=seed)
+
+        # ------ WAIT: the prediction-INSENSITIVE control ------
+        wait = sweep_noise(
+            lambda s: WaitPolicy(k=16,
+                                 predictor=LogNormalNoisePredictor(s)),
+            lams, sigmas, ln, ht, num_requests=n_req, seed=seed)
+
+        # σ=0 must reproduce the oracle column bit-for-bit
+        for pol, grid in (("srpt", srpt), ("multibin", mb)):
+            oracle_pol = (SRPTPolicy(b_max=16) if pol == "srpt"
+                          else MultiBinPolicy(num_bins=4))
+            for li, lam in enumerate(lams):
+                ref = simulate_policy_fast(oracle_pol, lam, ln, ht,
+                                           num_requests=n_req, seed=seed)
+                assert abs(grid["mean_wait"][li, 0] - ref["mean_wait"]) \
+                    < 1e-9, (pol, lam)
+        # WAIT must be flat in σ (membership never reads lengths)
+        assert np.allclose(wait["mean_wait"],
+                           wait["mean_wait"][:, :1]), "WAIT saw predictions"
+        # noise must cost SRPT delay at the heavy-tail operating point
+        hi = len(lams) - 1
+        assert srpt["mean_wait"][hi, -1] > srpt["mean_wait"][hi, 0]
+
+        for li, lam in enumerate(lams):
+            for si, s in enumerate(sigmas):
+                derived[f"srpt_lam{lam}_sig{s}"] = float(
+                    srpt["mean_wait"][li, si])
+            derived[f"multibin_lam{lam}_sig{sigmas[-1]}"] = float(
+                mb["mean_wait"][li, -1])
+
+        # ------ learned head vs raw noisy observation ------
+        feature_noise = 0.5
+        learned = LearnedPredictor(feature_noise=feature_noise).fit(
+            ln, num_train=10_000 if quick else 20_000, seed=0)
+        raw = LogNormalNoisePredictor(sigma=feature_noise)
+        rng = np.random.default_rng(123)
+        held_out = np.maximum(ln.sample(rng, n_req).astype(np.float64), 1.0)
+        rmse_learned = prediction_log_rmse(
+            learned.predict(55, held_out), held_out)
+        rmse_raw = prediction_log_rmse(raw.predict(55, held_out), held_out)
+        w_learned = simulate_policy_fast(
+            SRPTPolicy(b_max=16, predictor=learned), lams[-1], ln, ht,
+            num_requests=n_req, seed=seed)["mean_wait"]
+        w_raw = simulate_policy_fast(
+            SRPTPolicy(b_max=16, predictor=raw), lams[-1], ln, ht,
+            num_requests=n_req, seed=seed)["mean_wait"]
+        assert rmse_learned < rmse_raw
+        derived["learned_log_rmse"] = rmse_learned
+        derived["raw_log_rmse"] = rmse_raw
+        derived["srpt_wait_learned"] = float(w_learned)
+        derived["srpt_wait_raw"] = float(w_raw)
+
+    emit_bench("simulators", {
+        "workload": f"lognormal(7,0.7) heavy tail, lams={lams}, "
+                    f"sigmas={sigmas}, {n_req} requests, Fig-6b constants",
+        "predictor": "lognormal_noise (multiplicative, mean-preserving)",
+        "srpt_b16_mean_wait": srpt["mean_wait"].tolist(),
+        "multibin4_mean_wait": mb["mean_wait"].tolist(),
+        "wait_k16_mean_wait": wait["mean_wait"].tolist(),
+        "srpt_sweep_s": t_srpt,
+        "learned_vs_raw": {
+            "feature_noise": feature_noise,
+            "log_rmse": {"learned": rmse_learned, "raw": rmse_raw},
+            "srpt_mean_wait": {"learned": float(w_learned),
+                               "raw": float(w_raw)},
+        },
+    }, key="pr4_predictors")
+    emit("predictor_robustness", t_all.seconds, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("REPRO_BENCH_QUICK", "0") == "1")

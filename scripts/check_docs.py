@@ -8,6 +8,10 @@
    must be mentioned in docs/equations.md (backtick-quoted registry name),
    so a new discipline cannot land undocumented.  The same check runs
    inside ``benchmarks.bench_batching_policies.registry_coverage``.
+3. Predictor coverage: every length predictor registered in
+   ``repro.core.predictors`` must be mentioned in docs/predictors.md
+   (backtick-quoted registry name) — same rationale, same enforcement via
+   ``registry_coverage``.
 
 Run from the repo root: ``PYTHONPATH=src python scripts/check_docs.py``.
 """
@@ -48,26 +52,49 @@ def check_links() -> list:
     return errors
 
 
-def check_policy_docs() -> list:
-    sys.path.insert(0, os.path.join(ROOT, "src"))
-    from repro.core.policies import REGISTRY
-    eq = os.path.join(ROOT, "docs", "equations.md")
-    if not os.path.exists(eq):
-        return ["docs/equations.md is missing"]
-    with open(eq) as f:
+def _check_registry_docs(registry: dict, doc_relpath: str,
+                         kind: str) -> list:
+    """Every key of ``registry`` must appear backtick-quoted in the given
+    doc file — one rule for every registry the repo gates."""
+    path = os.path.join(ROOT, doc_relpath)
+    if not os.path.exists(path):
+        return [f"{doc_relpath} is missing"]
+    with open(path) as f:
         text = f.read()
-    return [f"docs/equations.md: registered policy `{name}` is not "
-            f"documented" for name in sorted(REGISTRY)
-            if f"`{name}`" not in text]
+    return [f"{doc_relpath}: registered {kind} `{name}` is not documented"
+            for name in sorted(registry) if f"`{name}`" not in text]
+
+
+def _src_on_path():
+    src = os.path.join(ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def check_policy_docs() -> list:
+    _src_on_path()
+    from repro.core.policies import REGISTRY
+    return _check_registry_docs(REGISTRY, os.path.join("docs",
+                                                       "equations.md"),
+                                "policy")
+
+
+def check_predictor_docs() -> list:
+    _src_on_path()
+    from repro.core.predictors import PREDICTORS
+    return _check_registry_docs(PREDICTORS, os.path.join("docs",
+                                                         "predictors.md"),
+                                "predictor")
 
 
 def main() -> int:
-    errors = check_links() + check_policy_docs()
+    errors = check_links() + check_policy_docs() + check_predictor_docs()
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         files = len(doc_files())
-        print(f"check_docs: OK ({files} files, links + policy coverage)")
+        print(f"check_docs: OK ({files} files, links + policy/predictor "
+              f"coverage)")
     return 1 if errors else 0
 
 

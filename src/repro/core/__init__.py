@@ -8,4 +8,6 @@
 #   policy_opt     optimal n_max (V1/V2), optimal fixed batch b*       (10-13, 25)
 #   bulk           dynamic / fixed / elastic batching bulk queues      (14-26)
 #   simulate       event-driven simulators validating every formula    (paper SV)
+#   predictors     length predictors (oracle / noise models / learned head)
+#                  driving SRPT ordering + multi-bin routing
 #   control        adaptive control plane wiring analytics into the engine

@@ -248,7 +248,7 @@ def multibin_split(dist: TokenDistribution, edges):
 
 
 def multibin_bound(dist: TokenDistribution, lat: BatchLatencyModel,
-                   lam: float, edges) -> dict:
+                   lam: float, edges, quantile: float = 1.0) -> dict:
     """Inoue-style mean-delay upper bound for multi-bin batching
     (serve-all-waiting within the picked bin, no batch cap), as the
     minimum of two envelope arms:
@@ -275,7 +275,20 @@ def multibin_bound(dist: TokenDistribution, lat: BatchLatencyModel,
     Both arms are envelope (coupling) arguments, not closed-form exact
     results; ``tests/test_policies.py`` validates dominance against the
     simulator across loads.  Returns the arms alongside the combined
-    ``wait_bound``."""
+    ``wait_bound``.
+
+    ``quantile`` (like ``dynamic_batching_bound``'s) caps the *round
+    arm's* per-bin padding levels at the distribution's ``quantile``-point
+    instead of its max support.  The open last bin is what breaks the arm
+    on heavy tails: lognormal(7, 0.7) has max support ~32768, so
+    ``alpha~ = max_j (k1 + k3 pad_j)`` makes ``lam * alpha~ >= 1`` and the
+    arm returns inf at loads where the simulator is perfectly stable.
+    With ``quantile < 1`` the envelope ignores the top ``(1-q)`` tail of
+    the padding support — no longer a strict bound (pair it with
+    ``analytic_kind='approx'``), but finite and useful across the heavy-
+    tail operating range.  The singleton arm keeps the exact pads: it
+    integrates over the pmf, so the tail's mass — not its support —
+    enters, and it stays finite regardless."""
     parts = multibin_split(dist, edges)
     k1, k2, k3, k4 = lat.k1, lat.k2, lat.k3, lat.k4
     # Arm A: P-K on the bin-padded singleton service
@@ -287,8 +300,10 @@ def multibin_bound(dist: TokenDistribution, lat: BatchLatencyModel,
     es2 = float((dist.pmf * s ** 2).sum())
     from repro.core.mg1 import pollaczek_khinchine
     wait_a = pollaczek_khinchine(lam, es, es2)
-    # Arm B: one clearing round as a single bulk service
-    occupied = [(p, pad) for p, _, pad in parts if p > 0]
+    # Arm B: one clearing round as a single bulk service (pads optionally
+    # capped at the quantile envelope; quantile=1.0 keeps the strict arm)
+    pad_cap = dist.max_order_stat_limit(quantile)
+    occupied = [(p, min(pad, pad_cap)) for p, _, pad in parts if p > 0]
     alpha = max(k1 + k3 * pad for _, pad in occupied)
     beta = sum(k2 + k4 * pad for _, pad in occupied)
     wait_b = inoue_bound(lam, alpha, beta)
@@ -298,6 +313,7 @@ def multibin_bound(dist: TokenDistribution, lat: BatchLatencyModel,
         "wait_round_arm": float(wait_b),
         "alpha": float(alpha),
         "beta": float(beta),
+        "quantile": float(quantile),
         "stable": lam * alpha < 1.0,
     }
 

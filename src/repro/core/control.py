@@ -17,6 +17,12 @@ configuration from the paper's models:
   * ``bin_edges`` — load-dependent multi-bin boundaries
                  (:func:`repro.core.bulk.optimize_bin_edges`) whenever the
                  recommended policy is 'multibin'
+  * ``predictor`` — which length predictor
+                 (:mod:`repro.core.predictors` registry name) should feed
+                 the recommended policy's length-based routing; set
+                 whenever the policy consumes predicted lengths
+                 ('multibin'), None otherwise — a recommendation is only
+                 actionable together with the estimator that powers it
 
 The serving engine polls ``recommendation()`` between batches; hysteresis
 avoids thrashing.
@@ -47,6 +53,8 @@ class Recommendation:
     lam_hat: float
     details: dict
     bin_edges: Optional[tuple] = None   # set when policy == 'multibin'
+    predictor: Optional[str] = None     # registry name, when the policy
+    #                                     routes on predicted length
 
 
 def tail_index(dist: TokenDistribution) -> float:
@@ -61,7 +69,7 @@ class AdaptiveController:
                  loss_cost: float = 4.0, elastic_available: bool = True,
                  window: int = 4096, min_samples: int = 64,
                  heavy_tail_scv: float = 0.5, b_search: int = 64,
-                 num_bins: int = 4):
+                 num_bins: int = 4, length_predictor: str = "oracle"):
         self.single_lat = single_lat
         self.batch_lat = batch_lat
         self.theta = theta
@@ -72,6 +80,11 @@ class AdaptiveController:
         self.heavy_tail_scv = heavy_tail_scv
         self.b_search = b_search
         self.num_bins = num_bins
+        # which length predictor backs length-based routing; validated
+        # against the predictor registry so recommendations stay actionable
+        from repro.core.predictors import PREDICTORS
+        assert length_predictor in PREDICTORS, length_predictor
+        self.length_predictor = length_predictor
         self._tokens = deque(maxlen=window)
         self._arrivals = deque(maxlen=window)
         self._last: Optional[Recommendation] = None
@@ -131,7 +144,11 @@ class AdaptiveController:
             n_max=n_max, b_max=b_max, policy=policy, heavy_tailed=heavy,
             lam_hat=lam,
             details={"scv": scv, "objective": ch.objective,
-                     "expected_wait": ch.wait, "loss_frac": ch.loss_frac})
+                     "expected_wait": ch.wait, "loss_frac": ch.loss_frac},
+            # multibin routes on predicted length: name the predictor that
+            # should feed it (repro.core.predictors registry)
+            predictor=(self.length_predictor if policy == "multibin"
+                       else None))
         # hysteresis: ignore <10% n_max moves (bin_edges revert alongside,
         # so the recommendation stays internally consistent)
         if (not force and self._last is not None

@@ -27,10 +27,18 @@ implementation — policies without a compiled twin fall back to the oracle:
     buffered arrival (or the head's timeout), membership via
     ``searchsorted``, padding via the shared sparse-table range max.
   * ``"srpt"``         — shortest-predicted-first batching as a
-    ``lax.while_loop`` over a min-segment-tree keyed by (token, arrival)
-    rank: 'leftmost rank with arrival <= start' is an O(log n) tree
-    descent, so each batch pops its b_max shortest waiting requests in
-    O(b_max log n).
+    ``lax.while_loop`` over a min-segment-tree keyed by (PREDICTED token,
+    arrival) rank: 'leftmost rank with arrival <= start' is an O(log n)
+    tree descent, so each batch pops its b_max shortest waiting requests
+    in O(b_max log n).
+
+Every kernel honors the predicted-vs-true column convention
+(:mod:`repro.core.predictors`): membership/ordering inputs (SRPT's rank
+order, multi-bin's bin assignment) come from ``Workload.predicted`` while
+the service-law inputs (range-max tables, scan token carries) stay on the
+true tokens.  ``sweep_noise(policy_factory, lam_grid, sigma_grid, ...)``
+sweeps the (arrival rate, prediction noise) plane; SRPT cells are stacked
+as lanes of ONE vmapped batch-event loop.
 
 ``sweep(policies, lam_grid, ...)`` is the uniform entry point: every
 (λ, policy) combination whose policy rides the shared ``batch_scan``
@@ -381,7 +389,9 @@ def _multibin_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
     wl = policy.sample_workload(lam, dist, num_requests, seed)
     arr, tok = wl.arrivals, wl.tokens
     n = len(arr)
-    bins = policy.bin_of(tok, dist)
+    # bin ROUTING keys off the predicted column; the range-max table below
+    # (the padded service law) stays on the true tokens
+    bins = policy.bin_of(wl.predicted_or_true, dist)
     B = policy.num_bins
     members = [np.nonzero(bins == j)[0] for j in range(B)]
     arr_b, lens, L = _pow2_rows([arr[m] for m in members], np.inf)
@@ -491,14 +501,15 @@ def _wait_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
 # SRPT shortest-predicted-first (jitted while_loop over a min-segment-tree)
 # ----------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=None)
-def _srpt_loop(L: int):
+def _srpt_core(L: int):
     """One iteration per SRPT batch.  Requests are laid out in rank order
-    (token count, then arrival); a min-segment-tree over their arrival
-    times (served leaves := +inf) answers 'leftmost rank with arrival <=
-    start' in O(log L), which IS the shortest waiting request.  Each batch
-    pops up to b_max such leaves (1 when the server was idle and the next
-    arrival starts alone, exactly like dynamic batching)."""
+    (PREDICTED token count, then arrival); a min-segment-tree over their
+    arrival times (served leaves := +inf) answers 'leftmost rank with
+    arrival <= start' in O(log L), which IS the shortest-predicted waiting
+    request.  Each batch pops up to b_max such leaves (1 when the server
+    was idle and the next arrival starts alone, exactly like dynamic
+    batching).  ``tok_rank`` holds the TRUE token counts in rank order —
+    the padded service law never sees predictions."""
     LOG = L.bit_length() - 1     # tree depth: root 1, leaves [L, 2L)
 
     def run(tree, tok_rank, n, b_max, k1, k2, k3, k4):
@@ -548,15 +559,28 @@ def _srpt_loop(L: int):
         _, _, starts, nb, _ = lax.while_loop(cond, body, init)
         return starts, nb
 
-    return jax.jit(run)
+    return run
 
 
-@kernel("srpt")
-def _srpt_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
-    arr, tok = wl.arrivals, wl.tokens
-    n = len(arr)
-    order = np.argsort(tok, kind="stable")     # rank = (token, arrival)
+@functools.lru_cache(maxsize=None)
+def _srpt_loop(L: int):
+    return jax.jit(_srpt_core(L))
+
+
+@functools.lru_cache(maxsize=None)
+def _srpt_loop_vmapped(L: int):
+    """(lane, lane, shared...) vmap of the SRPT batch-event loop: every
+    (λ, σ) cell of ``sweep_noise`` becomes one lane of a single jitted
+    while_loop (lanes run until the slowest finishes, with masked bodies)."""
+    return jax.jit(jax.vmap(
+        _srpt_core(L), in_axes=(0, 0, None, None, None, None, None, None)))
+
+
+def _srpt_rank_arrays(arr: np.ndarray, tok: np.ndarray, key: np.ndarray):
+    """Host prep shared by the single-cell kernel and ``sweep_noise``:
+    rank order by (predicted ``key``, arrival), power-of-two padded
+    arrival/true-token rows, and the min-segment-tree over arrivals."""
+    order = np.argsort(key, kind="stable")     # rank = (predicted, arrival)
     arr_rank, _, L = _pow2_rows([arr[order]], np.inf)
     tok_rank, _, _ = _pow2_rows([tok[order]], -np.inf)
     tree = np.full(2 * L, np.inf)
@@ -566,25 +590,38 @@ def _srpt_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
         lvl = np.minimum(lvl[0::2], lvl[1::2])
         size //= 2
         tree[size:2 * size] = lvl
-    with jax.experimental.enable_x64():
-        starts_rank, nb = _srpt_loop(L)(
-            jnp.asarray(tree, jnp.float64),
-            jnp.asarray(tok_rank[0], jnp.float64), jnp.int32(n),
-            jnp.int32(policy.b_max if policy.b_max is not None else L),
-            jnp.float64(lat.k1), jnp.float64(lat.k2),
-            jnp.float64(lat.k3), jnp.float64(lat.k4))
-        nb = int(nb)
-        starts_rank = np.asarray(starts_rank)[:n]
+    return order, tree, tok_rank[0], L
+
+
+def _srpt_stats(starts_rank, nb, order, arr):
+    n = len(arr)
     starts_req = np.empty(n)
-    starts_req[order] = starts_rank
+    starts_req[order] = np.asarray(starts_rank)[:n]
     waits = starts_req - arr
     w = _warm(waits)
     return {
         "mean_wait": float(w.mean()),
         "p95_wait": float(np.percentile(w, 95)),
-        "mean_batch": float(n / max(nb, 1)),
+        "mean_batch": float(n / max(int(nb), 1)),
         "waits": w,
     }
+
+
+@kernel("srpt")
+def _srpt_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    arr, tok = wl.arrivals, wl.tokens
+    n = len(arr)
+    order, tree, tok_rank, L = _srpt_rank_arrays(arr, tok,
+                                                 wl.predicted_or_true)
+    with jax.experimental.enable_x64():
+        starts_rank, nb = _srpt_loop(L)(
+            jnp.asarray(tree, jnp.float64),
+            jnp.asarray(tok_rank, jnp.float64), jnp.int32(n),
+            jnp.int32(policy.b_max if policy.b_max is not None else L),
+            jnp.float64(lat.k1), jnp.float64(lat.k2),
+            jnp.float64(lat.k3), jnp.float64(lat.k4))
+        return _srpt_stats(starts_rank, nb, order, arr)
 
 
 # ----------------------------------------------------------------------------
@@ -647,3 +684,79 @@ def simulate_policy_sweep_fast(lam_grid, dist, lat, policies: dict,
     """Drop-in fast twin of simulate_policy_sweep (legacy argument order)."""
     return sweep(policies, lam_grid, dist, lat,
                  num_requests=num_requests, seed=seed)
+
+
+# ----------------------------------------------------------------------------
+# Noise-robustness sweep over the (arrival rate, prediction error) plane
+# ----------------------------------------------------------------------------
+
+def sweep_noise(policy_factory: Callable[[float], BatchPolicy], lam_grid,
+                sigma_grid, dist, lat, num_requests: int = 50_000,
+                seed: int = 0) -> dict:
+    """Mean wait over the (λ, σ) grid: how a length-aware policy's win
+    erodes as its predictor degrades.
+
+    ``policy_factory(sigma)`` builds the policy at prediction-noise level
+    ``sigma`` (typically with a
+    :class:`repro.core.predictors.LogNormalNoisePredictor` of that sigma;
+    sigma=0 must reproduce the oracle).  The workload stream per λ is
+    identical across the σ row — the predictor rng is salted away from the
+    workload rng — so the columns differ ONLY by prediction quality.
+
+    When every produced policy rides the ``srpt`` kernel, all (λ, σ)
+    cells become lanes of ONE vmapped jitted batch-event loop
+    (``_srpt_loop_vmapped``); otherwise cells dispatch through
+    ``simulate_policy_fast`` individually (multi-bin's per-bin row count
+    varies with σ, so its kernel shapes cannot share a vmap).  Note the
+    vmap trip count is the MAX over lanes (batch events, and pops within
+    an event): lanes at loads where the server often idles (many
+    singleton batches) drag every lane, so on CPU the single dispatch can
+    cost more than per-cell calls — the lane layout pays off on
+    accelerator backends where lanes are data-parallel, and keeps one
+    compile for arbitrarily fine σ grids.
+
+    Returns ``{"mean_wait": [len(lam_grid), len(sigma_grid)], "lams",
+    "sigmas"}``.
+    """
+    lam_grid = [float(l) for l in lam_grid]
+    sigma_grid = [float(s) for s in sigma_grid]
+    pols = [policy_factory(s) for s in sigma_grid]
+    out = np.empty((len(lam_grid), len(sigma_grid)))
+    if all(p.fast_kernel == "srpt" for p in pols):
+        b_maxes = {p.b_max for p in pols}
+        assert len(b_maxes) == 1, "srpt lanes must share one b_max"
+        b_max = b_maxes.pop()
+        cells, trees, tok_ranks, orders, arrs = [], [], [], [], []
+        L = None
+        for li, lam in enumerate(lam_grid):
+            for si, pol in enumerate(pols):
+                wl = pol.sample_workload(lam, dist, num_requests, seed)
+                order, tree, tok_rank, L = _srpt_rank_arrays(
+                    wl.arrivals, wl.tokens, wl.predicted_or_true)
+                cells.append((li, si))
+                trees.append(tree)
+                tok_ranks.append(tok_rank)
+                orders.append(order)
+                arrs.append(wl.arrivals)
+        with jax.experimental.enable_x64():
+            starts, nbs = _srpt_loop_vmapped(L)(
+                jnp.asarray(np.stack(trees), jnp.float64),
+                jnp.asarray(np.stack(tok_ranks), jnp.float64),
+                jnp.int32(num_requests),
+                jnp.int32(b_max if b_max is not None else L),
+                jnp.float64(lat.k1), jnp.float64(lat.k2),
+                jnp.float64(lat.k3), jnp.float64(lat.k4))
+            starts = np.asarray(starts)
+            nbs = np.asarray(nbs)
+        for c, (li, si) in enumerate(cells):
+            out[li, si] = _srpt_stats(starts[c], nbs[c], orders[c],
+                                      arrs[c])["mean_wait"]
+    else:
+        for li, lam in enumerate(lam_grid):
+            for si, pol in enumerate(pols):
+                r = simulate_policy_fast(pol, lam, dist, lat,
+                                         num_requests=num_requests,
+                                         seed=seed)
+                out[li, si] = r["mean_wait"]
+    return {"mean_wait": out, "lams": np.asarray(lam_grid),
+            "sigmas": np.asarray(sigma_grid)}

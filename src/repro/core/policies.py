@@ -14,7 +14,10 @@ definition per discipline:
     trajectory-equal on equal seeds by construction;
   * **batch formation** — ``formation()`` returns an iterator-style state
     whose ``next_batch(t_free)`` encodes the trigger (when service starts)
-    and the member-selection rule (who is in the batch);
+    and the member-selection rule (who is in the batch); length-AWARE
+    membership (SRPT's ordering, multi-bin's routing) keys off the
+    workload's PREDICTED-length column (:mod:`repro.core.predictors`),
+    while clipping and the service law keep the true lengths;
   * **service law** — ``batch_time`` (simulator layer, a
     ``BatchLatencyModel``/``LatencyModel``) and ``service_clock``
     (scheduler layer, a ``ServiceClock``) give the batch occupancy and the
@@ -64,11 +67,23 @@ from repro.core.latency_model import BatchLatencyModel, LatencyModel
 @dataclasses.dataclass(frozen=True)
 class Workload:
     """Arrivals + (clipped) output-token counts, sampled in a fixed rng
-    order so every layer sees the same trajectory for equal seeds."""
+    order so every layer sees the same trajectory for equal seeds.
+
+    ``predicted`` is the first-class predicted-length column (see
+    :mod:`repro.core.predictors`): policies key membership/ordering off it
+    while clipping and the service law keep the TRUE ``tokens``.  It is
+    drawn from a salted rng stream SEPARATE from the workload rng, so
+    arrivals/tokens are bit-identical with or without a predictor; None
+    (no predictor configured) means "use the true lengths"."""
 
     arrivals: np.ndarray          # absolute arrival times (cumsum of expos)
     tokens: np.ndarray            # float64 output-token counts (clipped)
     inter: Optional[np.ndarray] = None   # inter-arrival times (FCFS oracle)
+    predicted: Optional[np.ndarray] = None   # predictor output (float64)
+
+    @property
+    def predicted_or_true(self) -> np.ndarray:
+        return self.tokens if self.predicted is None else self.predicted
 
 
 def single_from_batch(lat: BatchLatencyModel) -> LatencyModel:
@@ -199,17 +214,17 @@ class _SRPTFormation:
     server starts the earliest next arrival, exactly like dynamic
     batching."""
 
-    def __init__(self, arrivals: np.ndarray, tokens: np.ndarray,
+    def __init__(self, arrivals: np.ndarray, predicted: np.ndarray,
                  b_max: Optional[int]):
         self.arrivals = arrivals
-        self.tokens = tokens
+        self.predicted = predicted      # ordering key ONLY (never service)
         self.b_max = b_max
         self.head = 0
         self.heap: List = []
 
     def _admit(self, t: float):
         import heapq
-        arr, tok, n = self.arrivals, self.tokens, len(self.arrivals)
+        arr, tok, n = self.arrivals, self.predicted, len(self.arrivals)
         while self.head < n and arr[self.head] <= t:
             heapq.heappush(self.heap, (float(tok[self.head]), self.head))
             self.head += 1
@@ -286,6 +301,14 @@ class BatchPolicy:
       uses_single_latency  True -> expects a ``LatencyModel`` (single
                          request); drivers convert a ``BatchLatencyModel``
                          via :func:`single_from_batch`
+
+    ``predictor`` (a :class:`repro.core.predictors.LengthPredictor`, a
+    registry name, or a legacy spec dict) fills the workload's
+    ``predicted`` column; None keeps the oracle behavior (predicted ==
+    true, zero extra rng calls — trajectories bit-equal to the
+    pre-predictor code).  Length-aware policies (SRPT ordering, multi-bin
+    routing) consume the predicted column for MEMBERSHIP only; clipping
+    and the service law always use the true lengths.
     """
 
     name = "base"
@@ -294,8 +317,23 @@ class BatchPolicy:
     analytic_kind: Optional[str] = None
     uses_single_latency = False
 
-    def __init__(self, n_max: Optional[int] = None):
+    def __init__(self, n_max: Optional[int] = None, predictor=None):
         self.n_max = n_max
+        if predictor is not None:
+            from repro.core.predictors import predictor_from_spec
+            predictor = predictor_from_spec(predictor)
+        self.predictor = predictor
+
+    # -------------------- prediction law --------------------
+    def predict_lengths(self, key, tokens: np.ndarray,
+                        prompts=None) -> Optional[np.ndarray]:
+        """The policy's predicted-length column for ``tokens`` (true,
+        already clipped); None when no predictor is configured (oracle
+        semantics).  ``key`` seeds the predictor's salted rng stream —
+        layers that pass the same key see the same predictions."""
+        if self.predictor is None:
+            return None
+        return self.predictor.predict(key, tokens, prompts)
 
     # -------------------- workload law --------------------
     def sample_workload(self, lam: float, dist: Optional[TokenDistribution],
@@ -308,7 +346,8 @@ class BatchPolicy:
             tokens = np.zeros(num_requests)
         if self.n_max is not None:
             tokens = np.minimum(tokens, self.n_max)
-        return Workload(arrivals=arrivals, tokens=tokens)
+        return Workload(arrivals=arrivals, tokens=tokens,
+                        predicted=self.predict_lengths(seed, tokens))
 
     def clip(self, tokens):
         return (np.minimum(tokens, self.n_max) if self.n_max is not None
@@ -316,7 +355,8 @@ class BatchPolicy:
 
     # -------------------- formation (trigger + membership) ------------
     def formation(self, arrivals: np.ndarray, tokens: np.ndarray,
-                  dist: Optional[TokenDistribution] = None):
+                  dist: Optional[TokenDistribution] = None,
+                  predicted: Optional[np.ndarray] = None):
         raise NotImplementedError
 
     def schedule_length(self, n: int) -> int:
@@ -357,9 +397,9 @@ class BatchPolicy:
         return simulate_policy_fast(self, lam, dist, lat,
                                     num_requests=num_requests, seed=seed)
 
-    def scheduler(self, clock):
+    def scheduler(self, clock, predictor=None):
         from repro.serving.scheduler import PolicyScheduler
-        return PolicyScheduler(self, clock)
+        return PolicyScheduler(self, clock, predictor=predictor)
 
     # -------------------- fast-path hints --------------------
     def scan_lane(self):
@@ -388,8 +428,8 @@ class FCFSPolicy(BatchPolicy):
     uses_single_latency = True
 
     def __init__(self, n_max: Optional[int] = None,
-                 tau: Optional[float] = None):
-        super().__init__(n_max)
+                 tau: Optional[float] = None, predictor=None):
+        super().__init__(n_max, predictor)
         self.tau = tau
 
     def sample_workload(self, lam, dist, num_requests, seed) -> Workload:
@@ -398,9 +438,10 @@ class FCFSPolicy(BatchPolicy):
         rng = np.random.default_rng(seed)
         inter = rng.exponential(1.0 / lam, num_requests)
         tokens = self.clip(dist.sample(rng, num_requests))
-        return Workload(arrivals=np.cumsum(inter), tokens=tokens, inter=inter)
+        return Workload(arrivals=np.cumsum(inter), tokens=tokens, inter=inter,
+                        predicted=self.predict_lengths(seed, tokens))
 
-    def formation(self, arrivals, tokens, dist=None):
+    def formation(self, arrivals, tokens, dist=None, predicted=None):
         return _DynamicFormation(arrivals, b_max=1)
 
     def batch_time(self, ns, lat) -> float:
@@ -443,8 +484,8 @@ class DynamicPolicy(BatchPolicy):
     analytic_kind = "bound"
 
     def __init__(self, n_max: Optional[int] = None,
-                 b_max: Optional[int] = None):
-        super().__init__(n_max)
+                 b_max: Optional[int] = None, predictor=None):
+        super().__init__(n_max, predictor)
         self.b_max = b_max
         if b_max is not None:
             # the Inoue bound assumes serve-ALL-waiting; capping batch size
@@ -452,7 +493,7 @@ class DynamicPolicy(BatchPolicy):
             # bound for the capped system — no closed form available
             self.analytic_kind = None
 
-    def formation(self, arrivals, tokens, dist=None):
+    def formation(self, arrivals, tokens, dist=None, predicted=None):
         return _DynamicFormation(arrivals, self.b_max)
 
     def batch_time(self, ns, lat) -> float:
@@ -508,15 +549,16 @@ class FixedPolicy(BatchPolicy):
     fast_kernel = "fixed_cummax"
     analytic_kind = "approx"     # Eq 25 treats H^[b] as deterministic
 
-    def __init__(self, b: int = 4, n_max: Optional[int] = None):
-        super().__init__(n_max)
+    def __init__(self, b: int = 4, n_max: Optional[int] = None,
+                 predictor=None):
+        super().__init__(n_max, predictor)
         self.b = b
 
     def sample_workload(self, lam, dist, num_requests, seed) -> Workload:
         return super().sample_workload(
             lam, dist, (num_requests // self.b) * self.b, seed)
 
-    def formation(self, arrivals, tokens, dist=None):
+    def formation(self, arrivals, tokens, dist=None, predicted=None):
         return _FixedFormation(arrivals, self.b)
 
     def schedule_length(self, n: int) -> int:
@@ -551,16 +593,24 @@ class MultiBinPolicy(BatchPolicy):
     def __init__(self, num_bins: int = 4,
                  edges: Optional[Sequence[float]] = None,
                  n_max: Optional[int] = None,
-                 b_max: Optional[int] = None):
-        super().__init__(n_max)
+                 b_max: Optional[int] = None,
+                 predictor=None,
+                 bound_quantile: float = 1.0):
+        super().__init__(n_max, predictor)
         self.num_bins = int(num_bins if edges is None else len(edges) + 1)
         self.edges = None if edges is None else tuple(float(e) for e in edges)
         self.b_max = b_max
+        self.bound_quantile = float(bound_quantile)
         if b_max is not None:
             # both bound arms assume serve-all-waiting within the picked
             # bin; a batch cap lowers throughput, so neither arm dominates
             # the capped system
             self.analytic_kind = None
+        elif bound_quantile < 1.0:
+            # the quantile-envelope round arm ignores the top (1-q) tail of
+            # the padding support: finite on heavy tails, but no longer a
+            # strict bound
+            self.analytic_kind = "approx"
 
     def bin_edges(self, dist: Optional[TokenDistribution],
                   tokens: Optional[np.ndarray] = None) -> np.ndarray:
@@ -583,8 +633,13 @@ class MultiBinPolicy(BatchPolicy):
         return np.searchsorted(self.bin_edges(dist, tokens), tokens,
                                side="left")
 
-    def formation(self, arrivals, tokens, dist=None):
-        return _MultiBinFormation(arrivals, self.bin_of(tokens, dist),
+    def formation(self, arrivals, tokens, dist=None, predicted=None):
+        # routing keys off the PREDICTED length; the service law (padded
+        # range max in batch_time) stays on the true tokens — mispredicted
+        # long requests land in short bins and blow up that bin's padding,
+        # which is exactly the erosion Guldogan et al. analyze
+        key = tokens if predicted is None else predicted
+        return _MultiBinFormation(arrivals, self.bin_of(key, dist),
                                   self.num_bins, self.b_max)
 
     def batch_time(self, ns, lat) -> float:
@@ -595,7 +650,8 @@ class MultiBinPolicy(BatchPolicy):
         if self.b_max is not None:
             return None
         d = dist if self.n_max is None else dist.clip(self.n_max)
-        return multibin_bound(d, lat, lam, self.bin_edges(d))["wait_bound"]
+        return multibin_bound(d, lat, lam, self.bin_edges(d),
+                              quantile=self.bound_quantile)["wait_bound"]
 
     @classmethod
     def optimized(cls, lam: float, dist: TokenDistribution, lat,
@@ -627,14 +683,16 @@ class WaitPolicy(BatchPolicy):
     fast_kernel = "wait"
 
     def __init__(self, k: int = 8, timeout: Optional[float] = None,
-                 n_max: Optional[int] = None, b_max: Optional[int] = None):
-        super().__init__(n_max)
+                 n_max: Optional[int] = None, b_max: Optional[int] = None,
+                 predictor=None):
+        super().__init__(n_max, predictor)
         assert k >= 1
         self.k = int(k)
         self.timeout = timeout
         self.b_max = b_max
 
-    def formation(self, arrivals, tokens, dist=None):
+    def formation(self, arrivals, tokens, dist=None, predicted=None):
+        # membership is arrival-count/timer-driven: prediction-insensitive
         return _WaitFormation(arrivals, self.k, self.timeout, self.b_max)
 
     def batch_time(self, ns, lat) -> float:
@@ -651,25 +709,30 @@ class SRPTPolicy(BatchPolicy):
     queueing behind long ones AND the selected batch is length-homogeneous,
     so the ``H[b, max]`` padding waste shrinks like multi-bin batching's.
 
-    The predictor here is an oracle (the true sampled token count, after
-    ``n_max`` clipping); a real deployment would plug in a learned
-    length predictor.  With ``b_max=None`` every waiting request is
-    served, and membership degenerates to dynamic batching (order inside
-    a padded batch is irrelevant) — so the discipline defaults to a finite
-    cap.  No exact mean-delay formula is known for batched SRPT (classic
-    SRPT analysis is per-request preemptive), so ``analytic_kind`` stays
-    None."""
+    The ordering key is the PREDICTED output length: the default (no
+    ``predictor``) is the oracle — the true sampled token count, after
+    ``n_max`` clipping — and any :mod:`repro.core.predictors` instance
+    (noise models, bucket classifier, learned head) can replace it to
+    measure how prediction error erodes the win.  The service law always
+    uses the true lengths: a mispredicted-short request still decodes to
+    its true length and pads the whole batch.  With ``b_max=None`` every
+    waiting request is served, and membership degenerates to dynamic
+    batching (order inside a padded batch is irrelevant) — so the
+    discipline defaults to a finite cap.  No exact mean-delay formula is
+    known for batched SRPT (classic SRPT analysis is per-request
+    preemptive), so ``analytic_kind`` stays None."""
 
     name = "srpt"
     fast_kernel = "srpt"
 
     def __init__(self, b_max: Optional[int] = 8,
-                 n_max: Optional[int] = None):
-        super().__init__(n_max)
+                 n_max: Optional[int] = None, predictor=None):
+        super().__init__(n_max, predictor)
         self.b_max = b_max
 
-    def formation(self, arrivals, tokens, dist=None):
-        return _SRPTFormation(arrivals, tokens, self.b_max)
+    def formation(self, arrivals, tokens, dist=None, predicted=None):
+        key = tokens if predicted is None else predicted
+        return _SRPTFormation(arrivals, key, self.b_max)
 
     def batch_time(self, ns, lat) -> float:
         return float(lat.batch_time(len(ns), ns.max()))
@@ -686,8 +749,8 @@ class ContinuousPolicy(BatchPolicy):
     fast_kernel = None            # virtual-timeline loop IS the simulator
 
     def __init__(self, slots: int = 16, n_max: Optional[int] = None,
-                 chunk: int = 1):
-        super().__init__(n_max)
+                 chunk: int = 1, predictor=None):
+        super().__init__(n_max, predictor)
         assert chunk >= 1
         self.slots = slots
         self.chunk = chunk

@@ -128,7 +128,9 @@ def _oracle_mg1(policy, wl: Workload, lat, dist) -> dict:
 @oracle("batches")
 def _oracle_batches(policy, wl: Workload, lat, dist) -> dict:
     arr, tok = wl.arrivals, wl.tokens
-    fs = policy.formation(arr, tok, dist)
+    # membership/ordering sees the predicted column; batch_time below sees
+    # the TRUE tokens (predicted-vs-true convention, repro.core.predictors)
+    fs = policy.formation(arr, tok, dist, predicted=wl.predicted)
     waits = np.empty(len(arr))
     batch_sizes = []
     t_free = 0.0

@@ -140,7 +140,7 @@ def serve_continuous(engine, prompts: List[np.ndarray],
         slot_targ = np.zeros(slots, np.int64)
         slot_prod[active] = produced[slot_req[active]]
         slot_targ[active] = targets[slot_req[active]]
-        pool, tok, kv_d, prod_d, _, actives, dt = engine.decode_chunk(
+        pool, tok, kv_d, prod_d, _, _, actives, dt = engine.decode_chunk(
             pool, jnp.asarray(kv_lens.astype(np.int32)), tok,
             jnp.asarray(slot_prod), jnp.asarray(slot_targ), steps)
         steps_total += steps

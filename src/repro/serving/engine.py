@@ -13,7 +13,7 @@ Host-sync accounting (the chunked-decode design)
 Decoding is driven by ``decode_chunk``: a ``jax.lax.scan`` of up to
 ``EngineConfig.decode_chunk`` decode steps compiled once per
 (batch-bucket, step-count) pair. The carry — ``(cache, tok, kv_lens,
-produced)`` — lives on device for the whole chunk, so the host blocks once
+produced, per-slot sampling keys)`` — lives on device for the whole chunk, so the host blocks once
 per chunk instead of once per token: O(tokens / chunk) syncs instead of
 O(tokens). Each sync is counted in ``Engine.host_syncs`` and each chunk is
 logged in ``step_log``; ``generate`` reports the syncs it spent so the
@@ -68,14 +68,25 @@ def _bucket(n: int, lo: int, hi: int) -> int:
     return min(b, hi)
 
 
-def _sample_tokens(key, logits, temperature: float, top_k: Optional[int]):
-    """Temperature / top-k sampling over [..., vocab] logits (temperature
-    is a trace-time constant; temperature=0 callers use argmax instead)."""
+def _sample_tokens(keys, logits, temperature: float, top_k: Optional[int]):
+    """Temperature / top-k sampling over [b, vocab] logits with one PRNG
+    key PER SLOT (``keys``: [b, 2]); temperature is a trace-time constant
+    and temperature=0 callers use argmax instead.  Sampling per slot from
+    its own key — rather than one batch-wide key the categorical splits
+    internally by row — is what makes sampled streams independent of the
+    batch bucket a request happens to occupy."""
     if top_k is not None:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
-    return jax.random.categorical(key, logits / temperature,
-                                  axis=-1).astype(jnp.int32)
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / temperature, axis=-1)
+    )(keys, logits).astype(jnp.int32)
+
+
+def _split_slot_keys(keys):
+    """Advance every slot's key one step: returns (carried, subkeys)."""
+    split = jax.vmap(jax.random.split)(keys)
+    return split[:, 0], split[:, 1]
 
 
 class Engine:
@@ -121,14 +132,18 @@ class Engine:
     def _get_decode_chunk(self, b: int, steps: int, temperature: float = 0.0,
                           top_k: Optional[int] = None):
         """Fused multi-step decode: ``steps`` decode iterations as one
-        ``lax.scan``, carrying (cache, tok, kv_lens, produced, rng key)
-        device-side.
+        ``lax.scan``, carrying (cache, tok, kv_lens, produced, per-slot
+        keys) device-side.
 
-        The PRNG key rides the scan carry and splits once per step, so
-        temperature/top-k sampling inside the fused chunk consumes the same
-        key stream regardless of chunk size — chunk=1 and chunk=N produce
-        identical samples for a given starting key.  ``temperature=0``
-        (the default) is greedy argmax and never touches the key.
+        PER-SLOT PRNG keys (``[b, 2]``) ride the scan carry and each slot
+        splits its OWN key once per step, so temperature/top-k sampling
+        inside the fused chunk consumes per-request key streams that are
+        invariant to both chunk size AND batch composition: chunk=1 and
+        chunk=N produce identical samples, and a request gathered into a
+        smaller bucket by elastic compaction keeps its key and therefore
+        its stream (the keys are gathered alongside the cache in
+        ``compact``).  ``temperature=0`` (the default) is greedy argmax
+        and never touches the keys.
 
         Emits the per-step sampled token and active mask so the caller can
         reconstruct exact token streams / completion steps after the single
@@ -144,9 +159,9 @@ class Engine:
             max_seq = self.ecfg.max_seq
             advance_all = cfg.decode_cache_update == "uniform"
 
-            def fn(params, cache, tok, kv_lens, produced, targets, rng):
+            def fn(params, cache, tok, kv_lens, produced, targets, keys):
                 def body(carry, _):
-                    cache, tok, kv_lens, produced, rng = carry
+                    cache, tok, kv_lens, produced, keys = carry
                     logits, cache = decode_step(cfg, params, cache, tok,
                                                 kv_lens, ctx=ctx)
                     if cfg.decode_unroll_layers:
@@ -154,8 +169,8 @@ class Engine:
                         # restack so the scan carry keeps one structure
                         cache = stack_group_cache(cache, cfg.num_groups)
                     if temperature > 0.0:
-                        rng, sub = jax.random.split(rng)
-                        nxt = _sample_tokens(sub, logits, temperature, top_k)
+                        keys, subs = _split_slot_keys(keys)
+                        nxt = _sample_tokens(subs, logits, temperature, top_k)
                     else:
                         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                     active = produced < targets
@@ -163,13 +178,13 @@ class Engine:
                     step = (jnp.ones_like(kv_lens) if advance_all
                             else active.astype(kv_lens.dtype))
                     kv_lens = jnp.minimum(kv_lens + step, max_seq - 1)
-                    return (cache, nxt, kv_lens, produced, rng), (nxt, active)
+                    return (cache, nxt, kv_lens, produced, keys), (nxt, active)
 
                 carry, (toks, actives) = lax.scan(
-                    body, (cache, tok, kv_lens, produced, rng), None,
+                    body, (cache, tok, kv_lens, produced, keys), None,
                     length=steps)
-                cache, tok, kv_lens, produced, rng = carry
-                return cache, tok, kv_lens, produced, rng, toks, actives
+                cache, tok, kv_lens, produced, keys = carry
+                return cache, tok, kv_lens, produced, keys, toks, actives
 
             self._chunk_fns[key] = jax.jit(fn, donate_argnums=(1,))
         return self._chunk_fns[key]
@@ -223,37 +238,56 @@ class Engine:
 
     def decode_chunk(self, cache, kv_lens, tokens, produced, targets,
                      steps: int, temperature: float = 0.0,
-                     top_k: Optional[int] = None):
+                     top_k: Optional[int] = None, slot_keys=None):
         """Run ``steps`` fused decode iterations (one host sync). All array
         args/results are device-side; returns (cache, tok, kv_lens, produced,
-        step_tokens [steps,B], step_active [steps,B], wall_seconds).  The
-        sampling key stream (``Engine._sample_key``) advances one split per
-        decode step inside the scan, so results are chunking-invariant."""
+        slot_keys, step_tokens [steps,B], step_active [steps,B],
+        wall_seconds).  ``slot_keys`` ([B, 2], one PRNG key per slot) ride
+        the scan carry and each slot splits its own key once per decode
+        step — sampled streams are invariant to chunking AND to which
+        bucket/slot a request occupies (pass the gathered keys after
+        elastic compaction, and thread the returned keys into the next
+        chunk, as ``generate`` does).  ``slot_keys=None`` with
+        ``temperature>0`` falls back to fresh per-slot keys forked off
+        the advancing engine stream (``Engine._sample_key``) — still
+        well-distributed randomness per call, but only threading the keys
+        gives cross-chunk stream invariance; greedy callers get dummy
+        zeros (never consumed)."""
         b = int(tokens.shape[0])
+        if slot_keys is None:
+            if temperature > 0.0:
+                self._sample_key, base = jax.random.split(self._sample_key)
+                slot_keys = jax.vmap(
+                    lambda i: jax.random.fold_in(base, i))(jnp.arange(b))
+            else:
+                slot_keys = jnp.zeros((b, 2), jnp.uint32)
         fn = self._get_decode_chunk(b, steps, temperature, top_k)
         t0 = time.perf_counter()
-        cache, tok, kv_lens, produced, self._sample_key, toks, actives = fn(
+        cache, tok, kv_lens, produced, slot_keys, toks, actives = fn(
             self.params, cache, tokens, kv_lens, produced, targets,
-            self._sample_key)
+            slot_keys)
         tok = jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
         self.host_syncs += 1
         self.step_log.append(
             {"kind": "decode_chunk", "batch": b, "steps": steps,
              "seq": int(jnp.max(kv_lens)), "seconds": dt})
-        return cache, tok, kv_lens, produced, toks, actives, dt
+        return cache, tok, kv_lens, produced, slot_keys, toks, actives, dt
 
-    def compact(self, cache, kv_lens, tokens, keep_idx: np.ndarray):
+    def compact(self, cache, kv_lens, tokens, keep_idx: np.ndarray,
+                slot_keys=None):
         """Gather live slots into a smaller bucket (elastic batching's real
-        speedup on TPU)."""
+        speedup on TPU).  ``slot_keys`` are gathered alongside so each
+        surviving request keeps its own sampling stream."""
         nb = _bucket(len(keep_idx), self.ecfg.min_bucket, self.ecfg.max_batch)
         idx = np.zeros((nb,), np.int32)
         idx[:len(keep_idx)] = keep_idx
         gidx = jnp.asarray(idx)
         cache = jax.tree.map(
             lambda leaf: leaf[:, gidx] if leaf.ndim >= 2 else leaf, cache)
+        keys = None if slot_keys is None else slot_keys[gidx]
         return (cache, kv_lens[gidx], tokens[gidx], nb,
-                int(len(keep_idx)))
+                int(len(keep_idx)), keys)
 
     # ------------------------------------------------------------------
     def generate(self, prompts: List[np.ndarray], target_tokens: List[int],
@@ -269,11 +303,14 @@ class Engine:
         ``EngineConfig.decode_chunk`` (chunk=1 == the per-step reference
         loop; larger chunks produce identical tokens with O(tokens/chunk)
         host syncs). ``temperature``/``top_k`` override the EngineConfig
-        sampling settings (temperature 0 == greedy, the default); the PRNG
-        key is threaded through the fused scan's carry, so sampled tokens
-        are chunk-size invariant for a given ``seed``. Returns dict with
-        per-request completion times (seconds of engine wall time after
-        batch start) and token counts.
+        sampling settings (temperature 0 == greedy, the default).  Each
+        request gets its OWN sampling key (``fold_in`` of the batch base
+        key by request index) carried per-slot through the fused scan and
+        gathered on compaction, so for a given ``seed`` sampled tokens are
+        invariant to chunk size AND to elastic bucket compaction — padded
+        and elastic runs emit identical streams per request. Returns dict
+        with per-request completion times (seconds of engine wall time
+        after batch start) and token counts.
         """
         chunk = int(chunk if chunk is not None else self.ecfg.decode_chunk)
         assert chunk >= 1
@@ -288,9 +325,15 @@ class Engine:
         nreq = len(prompts)
         syncs0 = self.host_syncs
         cache, kv_lens, last, b, t_prefill = self.prefill_batch(prompts)
+        slot_keys = None
         if temperature > 0.0:
-            self._sample_key, sub = jax.random.split(self._sample_key)
-            tok = _sample_tokens(sub, last, temperature, top_k)
+            # one key per REQUEST (slot i holds request i right after
+            # prefill); padding slots get keys too, but never emit tokens
+            self._sample_key, base = jax.random.split(self._sample_key)
+            slot_keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+                jnp.arange(b))
+            slot_keys, subs = _split_slot_keys(slot_keys)
+            tok = _sample_tokens(subs, last, temperature, top_k)
         else:
             tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         live = np.arange(nreq)
@@ -319,8 +362,8 @@ class Engine:
                     # map global ids to current slot ids
                     slot_of = {g: i for i, g in enumerate(live)}
                     keep = np.array([slot_of[g] for g in still], np.int32)
-                    cache, kv_lens, tok, b, _ = self.compact(
-                        cache, kv_lens, tok, keep)
+                    cache, kv_lens, tok, b, _, slot_keys = self.compact(
+                        cache, kv_lens, tok, keep, slot_keys)
                     live = still
                     rem = targets[live] - produced[live]
             else:
@@ -332,9 +375,10 @@ class Engine:
             rem_max = int(rem.max())
             steps = chunk if rem_max >= chunk else 1 << (rem_max.bit_length() - 1)
             prod_d, targ_d = slot_state(b, live)
-            cache, tok, kv_lens, prod_d, toks, actives, dt = \
+            cache, tok, kv_lens, prod_d, slot_keys, toks, actives, dt = \
                 self.decode_chunk(cache, kv_lens, tok, prod_d, targ_d, steps,
-                                  temperature=temperature, top_k=top_k)
+                                  temperature=temperature, top_k=top_k,
+                                  slot_keys=slot_keys)
             clock += dt
             actives_np = np.asarray(actives)            # [steps, b]
             produced[live] = np.asarray(prod_d)[:len(live)]

@@ -29,6 +29,13 @@ readability:
 ``run_engine_schedule`` executes any batch-formation policy's batches on
 the REAL engine (prefill + fused chunked decode per batch), which is how
 multi-bin batching reaches the engine layer.
+
+Both the adapter and ``run_engine_schedule`` accept a *length predictor*
+(:mod:`repro.core.predictors`): batch membership/ordering is driven by
+PREDICTED output lengths while clipping and service use the true ones —
+the same predicted-vs-true convention the simulator layers follow, so a
+noisy predictor degrades the scheduler exactly like the fast sweep says
+it should.
 """
 
 from __future__ import annotations
@@ -95,6 +102,21 @@ class EngineClock:
 # Generic policy adapter (virtual timeline)
 # ----------------------------------------------------------------------------
 
+def _resolve_predictions(policy: BatchPolicy, predictor, predict_seed: int,
+                         ns: np.ndarray, reqs: List[Request]):
+    """The predicted-length column for a request list: an explicit
+    ``predictor`` (instance / registry name / spec dict) overrides the
+    policy's own; None with no policy predictor means oracle semantics
+    (formation falls back to the true lengths).  One definition shared by
+    ``PolicyScheduler`` and ``run_engine_schedule`` so the scheduler and
+    engine layers cannot diverge on the convention."""
+    prompts = [r.prompt_tokens for r in reqs[:len(ns)]]
+    if predictor is not None:
+        from repro.core.predictors import predictor_from_spec
+        return predictor_from_spec(predictor).predict(predict_seed, ns,
+                                                      prompts)
+    return policy.predict_lengths(predict_seed, ns, prompts)
+
 @dataclasses.dataclass
 class ScheduleResult:
     waits: np.ndarray           # queueing delay per request (paper's E[W])
@@ -109,11 +131,23 @@ class PolicyScheduler:
 
     The policy supplies formation (trigger + members) and per-batch
     completion semantics (``service_clock``); this adapter only walks the
-    virtual timeline and collects waits / end-to-end latencies."""
+    virtual timeline and collects waits / end-to-end latencies.
 
-    def __init__(self, policy: BatchPolicy, clock: ModelClock):
+    ``predictor`` overrides the policy's own length predictor for this
+    scheduler (None keeps it); formation sees the PREDICTED lengths while
+    clipping and the service clock keep the true ``target_output_tokens``
+    (the predicted-vs-true convention, :mod:`repro.core.predictors`).
+    ``predict_seed`` keys the predictor's rng stream."""
+
+    def __init__(self, policy: BatchPolicy, clock: ModelClock,
+                 predictor=None, predict_seed: int = 0):
         self.policy = policy
         self.clock = clock
+        if predictor is not None:
+            from repro.core.predictors import predictor_from_spec
+            predictor = predictor_from_spec(predictor)
+        self.predictor = predictor
+        self.predict_seed = predict_seed
 
     def run(self, reqs: List[Request]) -> ScheduleResult:
         pol = self.policy
@@ -126,7 +160,8 @@ class PolicyScheduler:
         e2e = np.zeros(n)
         lost = np.zeros(n, bool)
         sizes = []
-        fs = pol.formation(arr, ns)
+        fs = pol.formation(arr, ns, predicted=_resolve_predictions(
+            pol, self.predictor, self.predict_seed, ns, reqs))
         t_free = 0.0
         while (nb := fs.next_batch(t_free)) is not None:
             start, idx = nb
@@ -177,13 +212,15 @@ class ElasticBatchScheduler(PolicyScheduler):
 
 class MultiBinBatchScheduler(PolicyScheduler):
     """Multi-bin batching (Guldogan et al. 2024): per-bin dynamic batching
-    keyed by (predicted) output length; one shared server picks the bin
-    whose head request arrived earliest."""
+    keyed by PREDICTED output length (``predictor``: a
+    :mod:`repro.core.predictors` instance/name; None = oracle); one shared
+    server picks the bin whose head request arrived earliest."""
 
     def __init__(self, clock, num_bins: int = 4, edges=None, n_max=None,
-                 b_max: Optional[int] = None):
+                 b_max: Optional[int] = None, predictor=None):
         super().__init__(MultiBinPolicy(num_bins=num_bins, edges=edges,
-                                        n_max=n_max, b_max=b_max), clock)
+                                        n_max=n_max, b_max=b_max,
+                                        predictor=predictor), clock)
 
 
 class WaitBatchScheduler(PolicyScheduler):
@@ -198,10 +235,14 @@ class WaitBatchScheduler(PolicyScheduler):
 
 class SRPTBatchScheduler(PolicyScheduler):
     """SRPT-like shortest-predicted-first batch formation: the ``b_max``
-    shortest waiting requests form the next batch."""
+    requests with the shortest PREDICTED lengths form the next batch
+    (``predictor``: a :mod:`repro.core.predictors` instance/name; None =
+    oracle)."""
 
-    def __init__(self, clock, b_max: Optional[int] = 8, n_max=None):
-        super().__init__(SRPTPolicy(b_max=b_max, n_max=n_max), clock)
+    def __init__(self, clock, b_max: Optional[int] = 8, n_max=None,
+                 predictor=None):
+        super().__init__(SRPTPolicy(b_max=b_max, n_max=n_max,
+                                    predictor=predictor), clock)
 
 
 # ----------------------------------------------------------------------------
@@ -287,12 +328,19 @@ class ContinuousBatchScheduler:
 # Engine layer: execute a policy's batches on the real engine
 # ----------------------------------------------------------------------------
 
-def run_engine_schedule(policy: BatchPolicy, engine,
-                        reqs: List[Request]) -> ScheduleResult:
+def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
+                        predictor=None,
+                        predict_seed: int = 0) -> ScheduleResult:
     """Form batches with ``policy`` on the request stream's virtual arrival
     timeline, but execute each batch on the REAL engine (prefill + fused
     chunked decode); batch durations are wall-clock seconds.  Works for any
-    batch-formation policy (dynamic, fixed, elastic, multi-bin)."""
+    batch-formation policy (dynamic, fixed, elastic, multi-bin).
+
+    ``predictor`` (a :mod:`repro.core.predictors` instance, name, or spec;
+    None keeps ``policy.predictor``) feeds formation's membership/ordering
+    with PREDICTED lengths; the engine still decodes each request to its
+    true ``target_output_tokens`` — mispredictions show up as real padded
+    wall-clock, exactly like in production."""
     clock = EngineClock(engine)
     n = policy.schedule_length(len(reqs))
     arr = np.array([r.arrival for r in reqs[:n]])
@@ -302,7 +350,8 @@ def run_engine_schedule(policy: BatchPolicy, engine,
     waits = np.zeros(n)
     e2e = np.zeros(n)
     sizes = []
-    fs = policy.formation(arr, ns)
+    fs = policy.formation(arr, ns, predicted=_resolve_predictions(
+        policy, predictor, predict_seed, ns, reqs))
     t_free = 0.0
     while (nb := fs.next_batch(t_free)) is not None:
         start, idx = nb

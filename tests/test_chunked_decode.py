@@ -90,6 +90,22 @@ def test_sampling_chunk_invariant(engine, prompts):
     assert r1["tokens"] == r8["tokens"]
 
 
+def test_sampling_compaction_and_composition_invariant(engine, prompts):
+    """Per-slot PRNG key carries (ISSUE 4): each request samples from its
+    own fold_in key that is gathered on elastic compaction, so sampled
+    streams are identical between padded and elastic modes (compaction
+    fires here: 3 -> 2 live at bucket 4) and even for the same request
+    served alone vs inside a batch."""
+    kw = dict(temperature=0.8, seed=123, return_tokens=True)
+    rp = engine.generate(prompts, TARGETS, chunk=4, **kw)
+    re_ = engine.generate(prompts, TARGETS, elastic=True, chunk=4, **kw)
+    assert rp["tokens"] == re_["tokens"]
+    r1 = engine.generate(prompts, TARGETS, elastic=True, chunk=1, **kw)
+    assert r1["tokens"] == re_["tokens"]       # chunking still invariant
+    solo = engine.generate([prompts[0]], [TARGETS[0]], **kw)
+    assert solo["tokens"][0] == rp["tokens"][0]
+
+
 def test_sampling_differs_from_greedy_and_reseeds(engine, prompts):
     g = engine.generate(prompts, TARGETS, chunk=8, return_tokens=True)
     s1 = engine.generate(prompts, TARGETS, chunk=8, temperature=1.5,

@@ -1,0 +1,291 @@
+"""The length-predictor subsystem, across all four layers.
+
+Contract (ISSUE 4):
+  * the ORACLE predictor is a no-op: SRPT / multi-bin trajectories are
+    bit-equal to the pre-predictor (PR 3) behavior, on the reference
+    oracle AND the fast kernels (which must also stay trajectory-equal to
+    each other under noisy predictors);
+  * prediction-INSENSITIVE policies never see the predicted column: their
+    trajectories are bit-identical under any predictor;
+  * mean wait degrades monotonically as prediction noise sigma grows
+    (``fastsim.sweep_noise``, whose sigma=0 column must equal the plain
+    kernel — also pinning the vmapped lanes against the single-cell
+    path);
+  * the learned head beats the raw noisy observation at matched
+    per-feature error on held-out workloads — in prediction error AND in
+    downstream SRPT delay;
+  * the scheduler and engine layers accept predictors and follow the same
+    predicted-vs-true convention.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.distributions import LogNormalTokens, UniformTokens
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policies import (
+    DynamicPolicy, MultiBinPolicy, SRPTPolicy, WaitPolicy, single_from_batch)
+from repro.core.predictors import (
+    PREDICTORS, AdditiveNoisePredictor, BucketPredictor, LearnedPredictor,
+    LogNormalNoisePredictor, OraclePredictor, get_predictor,
+    prediction_log_rmse, predictor_from_spec)
+from repro.core.simulate import simulate_policy
+from repro.core.fastsim import simulate_policy_fast, sweep_noise
+from repro.data.pipeline import make_request_stream
+from repro.serving.metrics import summarize
+from repro.serving.scheduler import ModelClock
+
+UNI = UniformTokens(1000)
+LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+LN = LogNormalTokens(7.0, 0.7)
+HT = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+CLOCK = ModelClock(single_from_batch(LAT), LAT)
+
+
+def test_registry_covers_shipped_predictors():
+    assert {"oracle", "lognormal_noise", "additive_noise", "bucket",
+            "learned"} <= set(PREDICTORS)
+    assert isinstance(get_predictor("oracle"), OraclePredictor)
+    p = predictor_from_spec({"kind": "lognormal_noise", "sigma": 0.7})
+    assert isinstance(p, LogNormalNoisePredictor) and p.sigma == 0.7
+    assert predictor_from_spec(p) is p
+
+
+@pytest.mark.parametrize("plain,oracle", [
+    (SRPTPolicy(b_max=8), SRPTPolicy(b_max=8, predictor=OraclePredictor())),
+    (SRPTPolicy(b_max=8), SRPTPolicy(b_max=8, predictor="oracle")),
+    (MultiBinPolicy(num_bins=4),
+     MultiBinPolicy(num_bins=4, predictor="oracle")),
+], ids=["srpt-inst", "srpt-name", "multibin"])
+def test_oracle_predictor_bit_equal_to_pr3(plain, oracle):
+    """The oracle predictor must not move a single bit relative to the
+    predictor-less PR 3 policies — on the reference oracle and the fast
+    kernel, which must in turn agree with each other."""
+    for lam in (0.05, 0.2):
+        r_plain = simulate_policy(plain, lam, UNI, LAT,
+                                  num_requests=15_000, seed=7)
+        r_orcl = simulate_policy(oracle, lam, UNI, LAT,
+                                 num_requests=15_000, seed=7)
+        np.testing.assert_array_equal(r_orcl["waits"], r_plain["waits"])
+        f_plain = simulate_policy_fast(plain, lam, UNI, LAT,
+                                       num_requests=15_000, seed=7)
+        f_orcl = simulate_policy_fast(oracle, lam, UNI, LAT,
+                                      num_requests=15_000, seed=7)
+        np.testing.assert_array_equal(f_orcl["waits"], f_plain["waits"])
+        np.testing.assert_allclose(f_orcl["waits"], r_orcl["waits"],
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_sigma_zero_noise_is_the_oracle():
+    """lognormal_noise at sigma=0 multiplies by exp(0) exactly: bit-equal
+    to the oracle predictor, not merely close."""
+    pol0 = SRPTPolicy(b_max=8, predictor=LogNormalNoisePredictor(0.0))
+    pol = SRPTPolicy(b_max=8)
+    f0 = simulate_policy_fast(pol0, 0.2, UNI, LAT,
+                              num_requests=10_000, seed=3)
+    f = simulate_policy_fast(pol, 0.2, UNI, LAT, num_requests=10_000, seed=3)
+    np.testing.assert_array_equal(f0["waits"], f["waits"])
+
+
+@pytest.mark.parametrize("pol", [
+    SRPTPolicy(b_max=8, predictor=LogNormalNoisePredictor(0.5)),
+    SRPTPolicy(b_max=8, predictor=AdditiveNoisePredictor(std=120.0)),
+    SRPTPolicy(b_max=8, predictor=BucketPredictor(num_buckets=8,
+                                                  accuracy=0.8)),
+    MultiBinPolicy(num_bins=4, predictor=LogNormalNoisePredictor(0.5)),
+    MultiBinPolicy(num_bins=4, b_max=8,
+                   predictor=BucketPredictor(num_buckets=4, accuracy=0.6)),
+], ids=repr)
+def test_noisy_predictor_oracle_vs_fast_trajectory_equal(pol):
+    """The predicted column must thread identically through the reference
+    loop and the compiled kernel: same salted rng stream, so per-request
+    waits still match to float rounding under ANY predictor."""
+    for lam in (0.05, 0.2):
+        r = simulate_policy(pol, lam, UNI, LAT, num_requests=12_000, seed=7)
+        f = simulate_policy_fast(pol, lam, UNI, LAT,
+                                 num_requests=12_000, seed=7)
+        np.testing.assert_allclose(f["waits"], r["waits"],
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_workload_rng_untouched_by_predictor():
+    """Arrivals/tokens must be bit-identical with and without a predictor
+    (the predictor draws from a salted side stream), and prediction-
+    insensitive membership (dynamic, WAIT) must ignore the column."""
+    noisy = LogNormalNoisePredictor(2.0)
+    wl_a = SRPTPolicy(b_max=8).sample_workload(0.2, UNI, 5_000, 11)
+    wl_b = SRPTPolicy(b_max=8, predictor=noisy).sample_workload(
+        0.2, UNI, 5_000, 11)
+    np.testing.assert_array_equal(wl_a.arrivals, wl_b.arrivals)
+    np.testing.assert_array_equal(wl_a.tokens, wl_b.tokens)
+    assert wl_a.predicted is None and wl_b.predicted is not None
+    for mk in (lambda p: DynamicPolicy(b_max=8, predictor=p),
+               lambda p: WaitPolicy(k=8, predictor=p)):
+        base = simulate_policy_fast(mk(None), 0.2, UNI, LAT,
+                                    num_requests=10_000, seed=3)
+        pred = simulate_policy_fast(mk(noisy), 0.2, UNI, LAT,
+                                    num_requests=10_000, seed=3)
+        np.testing.assert_array_equal(base["waits"], pred["waits"])
+
+
+def test_sweep_noise_monotone_degradation():
+    """Heavy-tail SRPT at high load (λ=1: the regime where PR 3 measured
+    the oracle win): mean wait rises with sigma, the sigma=0 column
+    reproduces the plain kernel exactly (also pinning the vmapped lanes
+    against the single-cell path), and a big-noise SRPT never beats the
+    oracle."""
+    sigmas = [0.0, 0.5, 1.5]
+    g = sweep_noise(
+        lambda s: SRPTPolicy(b_max=16, predictor=LogNormalNoisePredictor(s)),
+        [1.0], sigmas, LN, HT, num_requests=20_000, seed=9)
+    w = g["mean_wait"][0]
+    ref = simulate_policy_fast(SRPTPolicy(b_max=16), 1.0, LN, HT,
+                               num_requests=20_000, seed=9)["mean_wait"]
+    assert abs(w[0] - ref) < 1e-9
+    assert w[0] < w[1] < w[2], w
+    # multibin: same direction via the per-cell fallback path
+    gm = sweep_noise(
+        lambda s: MultiBinPolicy(num_bins=4,
+                                 predictor=LogNormalNoisePredictor(s)),
+        [0.6], [0.0, 1.5], LN, HT, num_requests=20_000, seed=9)
+    assert gm["mean_wait"][0, 0] < gm["mean_wait"][0, 1]
+
+
+def test_bucket_accuracy_orders_srpt_delay():
+    """A more accurate bucket classifier yields a shorter SRPT mean wait
+    on the heavy tail (quantization alone costs little; misclassification
+    is what hurts)."""
+    waits = {}
+    for acc in (1.0, 0.3):
+        pol = SRPTPolicy(b_max=16, predictor=BucketPredictor(
+            num_buckets=8, accuracy=acc))
+        waits[acc] = simulate_policy_fast(pol, 0.6, LN, HT,
+                                          num_requests=25_000,
+                                          seed=9)["mean_wait"]
+    assert waits[1.0] < waits[0.3], waits
+
+
+def test_learned_head_beats_raw_noise_at_matched_error():
+    """At matched per-observation error (feature_noise == sigma), the
+    ridge head combining several noisy views wins on held-out workloads:
+    lower log-RMSE AND lower downstream SRPT delay."""
+    feature_noise = 0.5
+    learned = LearnedPredictor(feature_noise=feature_noise).fit(
+        LN, num_train=20_000, seed=0)
+    raw = LogNormalNoisePredictor(sigma=feature_noise)
+    rng = np.random.default_rng(123)          # held-out workload
+    true = np.maximum(LN.sample(rng, 30_000).astype(np.float64), 1.0)
+    rmse_l = prediction_log_rmse(learned.predict(55, true), true)
+    rmse_r = prediction_log_rmse(raw.predict(55, true), true)
+    assert rmse_l < 0.85 * rmse_r, (rmse_l, rmse_r)
+    w_l = simulate_policy_fast(SRPTPolicy(b_max=16, predictor=learned),
+                               0.6, LN, HT, num_requests=25_000,
+                               seed=9)["mean_wait"]
+    w_r = simulate_policy_fast(SRPTPolicy(b_max=16, predictor=raw),
+                               0.6, LN, HT, num_requests=25_000,
+                               seed=9)["mean_wait"]
+    assert w_l < w_r, (w_l, w_r)
+
+
+def test_multibin_bound_quantile_extends_heavy_tail_range():
+    """ROADMAP item: the round arm's alpha~ uses max support and returns
+    inf on heavy tails where the simulator is fine; the quantile envelope
+    keeps it finite and still above the simulated mean there."""
+    from repro.core.bulk import multibin_bound
+    pol = MultiBinPolicy(num_bins=4)
+    edges = pol.bin_edges(LN)
+    lam = 0.5
+    strict = multibin_bound(LN, HT, lam, edges)
+    q = multibin_bound(LN, HT, lam, edges, quantile=0.99)
+    sim = simulate_policy_fast(pol, lam, LN, HT,
+                               num_requests=25_000, seed=15)
+    assert np.isinf(strict["wait_round_arm"])
+    assert np.isfinite(q["wait_round_arm"])
+    assert q["wait_bound"] >= sim["mean_wait"]
+    # quantile=1.0 is bit-identical to the strict arm
+    assert multibin_bound(LN, HT, lam, edges, 1.0)["wait_round_arm"] \
+        == strict["wait_round_arm"]
+    # the policy surface: bound_quantile<1 downgrades analytic_kind
+    pq = MultiBinPolicy(num_bins=4, bound_quantile=0.99)
+    assert pq.analytic_kind == "approx"
+    assert np.isfinite(pq.analytic_delay(lam, LN, HT))
+    assert MultiBinPolicy(num_bins=4).analytic_kind == "bound"
+
+
+def test_scheduler_layer_accepts_predictor():
+    """PolicyScheduler: the oracle predictor is a bit-level no-op; a noisy
+    predictor (policy-attached or passed as override) degrades SRPT on
+    the virtual timeline just like the simulators say."""
+    reqs = make_request_stream(8_000, lam=0.6, dist=LN, vocab=100, seed=11)
+    clock = ModelClock(single_from_batch(HT), HT)
+    plain = summarize(SRPTPolicy(b_max=16).scheduler(clock).run(reqs))
+    orcl = summarize(SRPTPolicy(b_max=16).scheduler(
+        clock, predictor="oracle").run(reqs))
+    assert plain["mean_wait"] == orcl["mean_wait"]
+    noisy_pol = summarize(SRPTPolicy(
+        b_max=16, predictor=LogNormalNoisePredictor(1.5))
+        .scheduler(clock).run(reqs))
+    noisy_ovr = summarize(SRPTPolicy(b_max=16).scheduler(
+        clock, predictor=LogNormalNoisePredictor(1.5)).run(reqs))
+    assert noisy_ovr["mean_wait"] == noisy_pol["mean_wait"]  # same stream
+    assert noisy_pol["mean_wait"] > plain["mean_wait"]
+
+
+def test_controller_recommendation_names_predictor():
+    """AdaptiveController: a multibin recommendation carries the length
+    predictor that should feed the routing; other policies carry None."""
+    from repro.core.control import AdaptiveController
+    ctl = AdaptiveController(
+        LatencyModel(0.0212, 1.79), HT, elastic_available=False,
+        min_samples=64, length_predictor="learned")
+    rng = np.random.default_rng(0)
+    toks = LN.sample(rng, 512)
+    t = 0.0
+    for n in toks:
+        t += float(rng.exponential(1.0))
+        ctl.observe_arrival(t)
+        ctl.observe_completion(int(n))
+    rec = ctl.recommendation(force=True)
+    assert rec.policy == "multibin"
+    assert rec.predictor == "learned"
+    ctl2 = AdaptiveController(
+        LatencyModel(0.0212, 1.79), HT, elastic_available=True)
+    for n in toks:
+        ctl2.observe_completion(int(n))
+    t = 0.0
+    for _ in range(128):
+        t += 1.0
+        ctl2.observe_arrival(t)
+    rec2 = ctl2.recommendation(force=True)
+    assert rec2.policy != "multibin" and rec2.predictor is None
+    with pytest.raises(AssertionError):
+        AdaptiveController(LatencyModel(0.0212, 1.79), HT,
+                           length_predictor="nope")
+
+
+@pytest.fixture(scope="module")
+def engine():
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import Engine, EngineConfig
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-3b"), num_layers=2)
+    return Engine(cfg, EngineConfig(max_batch=4, max_seq=128,
+                                    prompt_bucket=16))
+
+
+def test_engine_layer_runs_predicted_batches(engine):
+    """run_engine_schedule with a noisy predictor: batches form on
+    predictions, the engine decodes true lengths — every request is still
+    served exactly once."""
+    from repro.serving.scheduler import run_engine_schedule
+    rng = np.random.default_rng(0)
+    reqs = make_request_stream(8, lam=5.0, dist=UNI, vocab=50, seed=2)
+    for r in reqs:                      # keep the smoke model's decode short
+        r.target_output_tokens = int(rng.integers(2, 12))
+    pol = SRPTPolicy(b_max=4)
+    res = run_engine_schedule(pol, engine, reqs,
+                              predictor=LogNormalNoisePredictor(0.8))
+    assert np.isfinite(res.waits).all() and (res.waits >= 0).all()
+    assert (res.e2e >= res.waits).all()
+    assert sum(res.batch_sizes) == len(reqs)
