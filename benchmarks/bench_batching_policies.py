@@ -83,19 +83,25 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     adapter) on a small workload; raise if any discipline broke.  The CI
     benchmark step calls this, so a policy that stops running fails the
     build.  Also gates the docs: every registered policy must be mentioned
-    in docs/equations.md and every registered length predictor in
-    docs/predictors.md (same checks as scripts/check_docs.py), so a new
-    discipline or predictor cannot land undocumented.  Every registered
-    predictor additionally runs end-to-end behind SRPT membership (the
-    most prediction-sensitive discipline) on both the fast simulator and
-    the scheduler adapter."""
+    in docs/equations.md, every registered length predictor in
+    docs/predictors.md, and every registered fleet router in docs/fleet.md
+    (same checks as scripts/check_docs.py), so a new discipline, predictor
+    or router cannot land undocumented.  Every registered predictor
+    additionally runs end-to-end behind SRPT membership (the most
+    prediction-sensitive discipline) on both the fast simulator and the
+    scheduler adapter, and every registered router runs a small fleet
+    end-to-end on both the fast fleet simulator and ``FleetScheduler``."""
     from repro.core.distributions import UniformTokens
-    from repro.core.fastsim import simulate_policy_fast
+    from repro.core.fastsim import simulate_fleet_fast, simulate_policy_fast
+    from repro.core.fleet import ROUTERS, default_routers
     from repro.core.latency_model import BatchLatencyModel, LatencyModel
-    from repro.core.policies import REGISTRY, SRPTPolicy, default_policies
-    from repro.core.predictors import PREDICTORS, LearnedPredictor
+    from repro.core.policies import (
+        DynamicPolicy, REGISTRY, SRPTPolicy, default_policies)
+    from repro.core.predictors import (
+        PREDICTORS, LearnedPredictor, PromptFeaturePredictor)
     from repro.data.pipeline import make_request_stream
     from repro.serving.metrics import summarize
+    from repro.serving.router import FleetScheduler, summarize_fleet
     from repro.serving.scheduler import ModelClock
 
     uni = UniformTokens(1000)
@@ -106,8 +112,12 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     policies = default_policies()
     missing = set(REGISTRY) - {type(p).name for p in policies.values()}
     assert not missing, f"default_policies() misses registered: {missing}"
+    routers = default_routers()
+    missing_r = set(ROUTERS) - {type(r).name for r in routers.values()}
+    assert not missing_r, f"default_routers() misses registered: {missing_r}"
     docs = _load_check_docs()
-    doc_errors = docs.check_policy_docs() + docs.check_predictor_docs()
+    doc_errors = (docs.check_policy_docs() + docs.check_predictor_docs()
+                  + docs.check_router_docs())
     assert not doc_errors, doc_errors
     out = {}
     for name, pol in policies.items():
@@ -120,8 +130,12 @@ def registry_coverage(n_req: int = 4_000) -> dict:
         out[name] = {"sim": sim["mean_wait"], "sched": sch["mean_wait"],
                      "analytic": ana}
     for pname, pcls in PREDICTORS.items():
-        pred = (LearnedPredictor().fit(uni, num_train=4_000, seed=0)
-                if pcls is LearnedPredictor else pcls())
+        if pcls is LearnedPredictor:
+            pred = LearnedPredictor().fit(uni, num_train=4_000, seed=0)
+        elif pcls is PromptFeaturePredictor:
+            pred = PromptFeaturePredictor.fitted_on(reqs)
+        else:
+            pred = pcls()
         pol = SRPTPolicy(b_max=8, predictor=pred)
         sim = simulate_policy_fast(pol, 0.2, uni, lat,
                                    num_requests=n_req, seed=3)
@@ -130,6 +144,15 @@ def registry_coverage(n_req: int = 4_000) -> dict:
         assert np.isfinite(sch["mean_wait"]), (pname, "scheduler")
         out[f"predictor:{pname}"] = {"sim": sim["mean_wait"],
                                      "sched": sch["mean_wait"]}
+    for rname, router in routers.items():
+        sim = simulate_fleet_fast(router, DynamicPolicy(b_max=8), 0.4, 2,
+                                  uni, lat, num_requests=n_req, seed=3)
+        sch = summarize_fleet(FleetScheduler(
+            router, DynamicPolicy(b_max=8), clock, 2).run(reqs))
+        assert np.isfinite(sim["mean_wait"]), (rname, "fast fleet")
+        assert np.isfinite(sch["mean_wait"]), (rname, "fleet scheduler")
+        out[f"router:{rname}"] = {"sim": sim["mean_wait"],
+                                  "sched": sch["mean_wait"]}
     return out
 
 

@@ -1,0 +1,135 @@
+"""PR 5: fleet routing across parallel batched replicas.
+
+Three fleet-level questions, all on the fast path
+(``fastsim.simulate_fleet_fast`` / ``fleet.sweep``):
+
+1. **Scaling curve**: mean wait vs replica count R at fixed TOTAL arrival
+   rate (uniform outputs, capped dynamic batching behind jsq) — the
+   'how many replicas do I need' surface, with the pooled M/G/R Erlang-C
+   floor (``fleet.mgr_whitt_wait``) for context.
+2. **Router comparison under heavy-tail lengths** (lognormal(7, 0.7),
+   Fig-6b constants, SRPT replicas): random vs round_robin vs power-of-d
+   vs jsq vs least_work at matched load — where prediction-aware dispatch
+   (least_work) wins over length-blind balancing.
+3. **Predictor-noise sensitivity of least_work**: the router's work
+   estimate driven by a multiplicative lognormal predictor of noise σ;
+   σ=0 must reproduce the oracle least_work fleet exactly (salted
+   predictor stream), growing σ erodes the win back toward random.
+
+Recorded as the ``pr5_fleet`` key of ``BENCH_simulators.json``
+(``emit_bench(..., key=...)`` — pr1..pr4 keys are never replaced).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):          # direct `python bench_....py` run
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, emit_bench, timer
+
+
+def main(quick: bool = False):
+    from repro.core.distributions import LogNormalTokens, UniformTokens
+    from repro.core.fastsim import simulate_fleet_fast
+    from repro.core.fleet import (
+        LeastWorkRouter, default_routers, mgr_whitt_wait, sweep)
+    from repro.core.latency_model import BatchLatencyModel
+    from repro.core.policies import DynamicPolicy, SRPTPolicy, \
+        single_from_batch
+    from repro.core.predictors import LogNormalNoisePredictor
+
+    uni = UniformTokens(1000)
+    lat = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+    ln = LogNormalTokens(7.0, 0.7)
+    ht = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+    n_req = 20_000 if quick else 40_000
+    seed = 3
+
+    derived = {}
+    with timer() as t_all:
+        # ------ 1: delay vs R at fixed total lambda ------
+        R_grid = [1, 2, 4, 8]
+        lam_tot = 0.8
+        t0 = time.perf_counter()
+        scal = sweep(R_grid, [lam_tot], "jsq", DynamicPolicy(b_max=8),
+                     uni, lat, num_requests=n_req, seed=seed)
+        t_sweep = time.perf_counter() - t0
+        mw = scal["mean_wait"][:, 0]
+        assert (np.diff(mw) < 0).all(), "more replicas must cut delay"
+        for ri, R in enumerate(R_grid):
+            derived[f"scaling_R{R}"] = float(mw[ri])
+
+        # analytic cell: jsq + FCFS replicas, where both the QNA split
+        # approximation and the pooled M/G/R Erlang-C floor are defined —
+        # sim must sit between the floor and ~the approximation
+        from repro.core.fleet import fleet_analytic_delay
+        from repro.core.policies import FCFSPolicy
+        lam_f, R_f = 0.25, 3
+        single = single_from_batch(lat)
+        es, es2 = single.moments(uni, None)
+        fcfs_sim = simulate_fleet_fast("jsq", FCFSPolicy(), lam_f, R_f,
+                                       uni, lat, num_requests=n_req,
+                                       seed=seed)["mean_wait"]
+        qna = fleet_analytic_delay("jsq", FCFSPolicy(), lam_f, R_f, uni,
+                                   lat)
+        floor = mgr_whitt_wait(lam_f, R_f, es, es2)
+        assert floor < fcfs_sim            # pooling dominates any router
+        derived["jsq_fcfs_sim"] = float(fcfs_sim)
+        derived["jsq_fcfs_qna"] = float(qna)
+        derived["mgr_pooled_floor"] = float(floor)
+
+        # ------ 2: router comparison, heavy tail, SRPT replicas ------
+        lam_ht, R_ht = 1.6, 4
+        routers = default_routers()
+        comp = {}
+        for name, router in routers.items():
+            comp[name] = simulate_fleet_fast(
+                router, SRPTPolicy(b_max=16), lam_ht, R_ht, ln, ht,
+                num_requests=n_req, seed=seed)["mean_wait"]
+            derived[f"router_{name}_ht"] = float(comp[name])
+        # prediction-aware dispatch beats every length-blind router
+        assert comp["least_work"] < min(
+            v for k, v in comp.items() if k != "least_work"), comp
+
+        # ------ 3: least_work predictor-noise sensitivity ------
+        sigmas = [0.0, 0.5, 1.0, 2.0]
+        noise_w = []
+        for s in sigmas:
+            router = LeastWorkRouter(
+                predictor=LogNormalNoisePredictor(sigma=s))
+            noise_w.append(simulate_fleet_fast(
+                router, SRPTPolicy(b_max=16), lam_ht, R_ht, ln, ht,
+                num_requests=n_req, seed=seed)["mean_wait"])
+            derived[f"least_work_sigma{s}"] = float(noise_w[-1])
+        # sigma=0 is the oracle fleet exactly (salted predictor stream)
+        assert abs(noise_w[0] - comp["least_work"]) < 1e-9
+        # noise erodes the routing win at the heavy-tail operating point
+        assert noise_w[-1] > noise_w[0]
+
+    emit_bench("simulators", {
+        "workload": f"scaling: uniform(0,1000) lam={lam_tot} over R={R_grid}"
+                    f"; routers: lognormal(7,0.7) heavy tail lam={lam_ht} "
+                    f"R={R_ht} SRPT b16; {n_req} requests",
+        "scaling_mean_wait": {str(R): float(v)
+                              for R, v in zip(R_grid, mw)},
+        "jsq_fcfs_analytic_cell": {
+            "lam": lam_f, "R": R_f, "sim": float(fcfs_sim),
+            "qna_approx": float(qna), "mgr_pooled_floor": float(floor)},
+        "router_mean_wait_ht": {k: float(v) for k, v in comp.items()},
+        "least_work_noise": {"sigmas": sigmas,
+                             "mean_wait": [float(v) for v in noise_w]},
+        "sweep_s": t_sweep,
+    }, key="pr5_fleet")
+    emit("fleet_routing", t_all.seconds, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("REPRO_BENCH_QUICK", "0") == "1")

@@ -13,7 +13,7 @@ def main() -> None:
     from benchmarks import (
         bench_latency_model, bench_batch_scaling, bench_order_stats,
         bench_clipping, bench_batching_policies, bench_fixed_batching,
-        bench_predictors, bench_engine_e2e)
+        bench_predictors, bench_fleet, bench_engine_e2e)
 
     print("name,us_per_call,derived")
     bench_latency_model.main(quick)       # Table I + Fig 2a
@@ -23,6 +23,7 @@ def main() -> None:
     bench_batching_policies.main(quick)   # Fig 5
     bench_fixed_batching.main(quick)      # Fig 6
     bench_predictors.main(quick)          # prediction-noise robustness
+    bench_fleet.main(quick)               # fleet routing across replicas
     bench_engine_e2e.main(quick)          # beyond-paper engine E2E
 
     # roofline table (deliverable g) from the dry-run artifacts, if present

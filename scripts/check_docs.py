@@ -12,6 +12,8 @@
    ``repro.core.predictors`` must be mentioned in docs/predictors.md
    (backtick-quoted registry name) — same rationale, same enforcement via
    ``registry_coverage``.
+4. Router coverage: every fleet router registered in ``repro.core.fleet``
+   must be mentioned in docs/fleet.md (backtick-quoted registry name).
 
 Run from the repo root: ``PYTHONPATH=src python scripts/check_docs.py``.
 """
@@ -87,14 +89,22 @@ def check_predictor_docs() -> list:
                                 "predictor")
 
 
+def check_router_docs() -> list:
+    _src_on_path()
+    from repro.core.fleet import ROUTERS
+    return _check_registry_docs(ROUTERS, os.path.join("docs", "fleet.md"),
+                                "router")
+
+
 def main() -> int:
-    errors = check_links() + check_policy_docs() + check_predictor_docs()
+    errors = (check_links() + check_policy_docs() + check_predictor_docs()
+              + check_router_docs())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         files = len(doc_files())
-        print(f"check_docs: OK ({files} files, links + policy/predictor "
-              f"coverage)")
+        print(f"check_docs: OK ({files} files, links + "
+              f"policy/predictor/router coverage)")
     return 1 if errors else 0
 
 

@@ -8,6 +8,10 @@
 #   policy_opt     optimal n_max (V1/V2), optimal fixed batch b*       (10-13, 25)
 #   bulk           dynamic / fixed / elastic batching bulk queues      (14-26)
 #   simulate       event-driven simulators validating every formula    (paper SV)
-#   predictors     length predictors (oracle / noise models / learned head)
-#                  driving SRPT ordering + multi-bin routing
+#   fastsim        compiled (jitted) twins of the simulators + fleet kernels
+#   predictors     length predictors (oracle / noise models / learned head /
+#                  prompt features) driving SRPT ordering, multi-bin routing
+#                  and least_work fleet dispatch
+#   fleet          routing across parallel batched replicas (router registry,
+#                  M/G/R transfer, QNA split approximation)
 #   control        adaptive control plane wiring analytics into the engine

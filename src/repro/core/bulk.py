@@ -219,6 +219,67 @@ def service_rate_curve(dist: TokenDistribution, lat: BatchLatencyModel,
 
 
 # ----------------------------------------------------------------------------
+# WAIT threshold admission (Dai et al. 2025): holding + clearing envelope
+# ----------------------------------------------------------------------------
+
+def _mean_capped_gamma(m: int, lam: float, cap: Optional[float]) -> float:
+    """E[min(X, cap)] for X ~ Gamma(m, scale=1/lam) (the time until the
+    m-th subsequent Poisson arrival); m=0 -> 0.  Uses the identity
+    x·f_m(x) = (m/λ)·f_{m+1}(x):  E[X·1{X<=c}] = (m/λ)·F_{m+1}(c)."""
+    if m == 0:
+        return 0.0
+    if cap is None:
+        return m / lam
+    from scipy import stats as st
+    below = float(st.gamma(a=m, scale=1.0 / lam).cdf(cap))
+    mass = float(st.gamma(a=m + 1, scale=1.0 / lam).cdf(cap))
+    return (m / lam) * mass + cap * (1.0 - below)
+
+
+def wait_bound(dist: TokenDistribution, lat: BatchLatencyModel, lam: float,
+               k: int, timeout: Optional[float] = None) -> dict:
+    """Mean-delay envelope for WAIT threshold admission (hold batch
+    formation until ``k`` requests are buffered or the head has waited
+    ``timeout``; then serve everything arrived, no batch cap) — the
+    M/D^k/1-like holding view with a timer cap:
+
+    * **Holding arm.**  Couple each request to the group of ``k``
+      consecutive arrivals it triggers with: the request in position j
+      (from the group head) is held at most until the group's trigger —
+      ``min(sum of its k-1-j subsequent interarrivals, timeout)`` — even
+      when the server is busy (a busy server only replaces holding with
+      queueing, which the second arm pays for).  Under Poisson arrivals
+      the positional hold is E[min(Gamma(k-1-j, 1/λ), timeout)], averaged
+      over j; without a timer it telescopes to (k-1)/(2λ), the mean
+      residual of the deterministic-count trigger.
+
+    * **Clearing arm.**  Once triggered, WAIT serves ALL arrived requests
+      — the serve-all-waiting discipline whose backlog is dominated by
+      Inoue's Eq-16 bound on the same (α, β) linear envelope dynamic
+      batching uses (holding only *coalesces* work into larger, more
+      amortized batches; it never adds work).
+
+    The sum of the arms is an envelope (coupling) argument like
+    ``multibin_bound``'s, not a closed form — Dai et al. prove throughput
+    optimality, not a delay formula — and is validated for dominance and
+    non-vacuousness against the simulator by ``tests/test_policies.py``
+    (``WaitPolicy.analytic_kind == 'bound'``).  Stability is the dynamic-
+    batching condition λ·α < 1 (holding does not change the drift)."""
+    assert k >= 1
+    holds = [_mean_capped_gamma(k - 1 - j, lam, timeout) for j in range(k)]
+    hold = float(np.mean(holds))
+    clearing = dynamic_batching_bound(dist, lat, lam)
+    return {
+        "wait_bound": hold + clearing["wait_bound"],
+        "hold_arm": hold,
+        "clearing_arm": clearing["wait_bound"],
+        "alpha": clearing["alpha"],
+        "beta": clearing["beta"],
+        "stable": clearing["stable"],
+    }
+
+
+# ----------------------------------------------------------------------------
 # Multi-bin batching (Guldogan et al. 2024): per-bin envelopes, delay bound,
 # load-dependent boundary optimization
 # ----------------------------------------------------------------------------

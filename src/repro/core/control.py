@@ -20,9 +20,17 @@ configuration from the paper's models:
   * ``predictor`` — which length predictor
                  (:mod:`repro.core.predictors` registry name) should feed
                  the recommended policy's length-based routing; set
-                 whenever the policy consumes predicted lengths
-                 ('multibin'), None otherwise — a recommendation is only
-                 actionable together with the estimator that powers it
+                 whenever the policy or router consumes predicted lengths
+                 ('multibin', 'least_work'), None otherwise — a
+                 recommendation is only actionable together with the
+                 estimator that powers it
+  * ``replicas`` / ``router`` — the fleet axis (:mod:`repro.core.fleet`):
+                 the smallest replica count keeping per-replica batched
+                 utilization under ``replica_target_util``
+                 (``fleet.recommend_replicas``), and the router to put in
+                 front of it — 'least_work' (predicted-work balancing)
+                 for heavy tails, 'jsq' (burst balancing) otherwise;
+                 enabled by ``max_replicas > 1``
 
 The serving engine polls ``recommendation()`` between batches; hysteresis
 avoids thrashing.
@@ -55,6 +63,9 @@ class Recommendation:
     bin_edges: Optional[tuple] = None   # set when policy == 'multibin'
     predictor: Optional[str] = None     # registry name, when the policy
     #                                     routes on predicted length
+    replicas: int = 1                   # fleet size (repro.core.fleet)
+    router: Optional[str] = None        # fleet router registry name, when
+    #                                     replicas > 1
 
 
 def tail_index(dist: TokenDistribution) -> float:
@@ -69,7 +80,9 @@ class AdaptiveController:
                  loss_cost: float = 4.0, elastic_available: bool = True,
                  window: int = 4096, min_samples: int = 64,
                  heavy_tail_scv: float = 0.5, b_search: int = 64,
-                 num_bins: int = 4, length_predictor: str = "oracle"):
+                 num_bins: int = 4, length_predictor: str = "oracle",
+                 max_replicas: int = 1,
+                 replica_target_util: float = 0.7):
         self.single_lat = single_lat
         self.batch_lat = batch_lat
         self.theta = theta
@@ -85,6 +98,10 @@ class AdaptiveController:
         from repro.core.predictors import PREDICTORS
         assert length_predictor in PREDICTORS, length_predictor
         self.length_predictor = length_predictor
+        assert max_replicas >= 1
+        assert 0.0 < replica_target_util < 1.0
+        self.max_replicas = int(max_replicas)
+        self.replica_target_util = float(replica_target_util)
         self._tokens = deque(maxlen=window)
         self._arrivals = deque(maxlen=window)
         self._last: Optional[Recommendation] = None
@@ -140,14 +157,30 @@ class AdaptiveController:
                 # tail: route by predicted length instead (bin_edges below)
                 policy = "multibin"
 
+        # fleet axis (repro.core.fleet): smallest replica count keeping
+        # per-replica batched utilization under target; a heavy tail wants
+        # length-aware dispatch (predicted-work balancing), a light tail
+        # only needs burst balancing
+        replicas, router = 1, None
+        if self.max_replicas > 1:
+            from repro.core.fleet import ROUTERS, recommend_replicas
+            replicas = recommend_replicas(
+                lam, clipped, self.batch_lat,
+                target_util=self.replica_target_util,
+                max_replicas=self.max_replicas)
+            if replicas > 1:
+                router = "least_work" if heavy else "jsq"
+                assert router in ROUTERS, router
+
         rec = Recommendation(
             n_max=n_max, b_max=b_max, policy=policy, heavy_tailed=heavy,
-            lam_hat=lam,
+            lam_hat=lam, replicas=replicas, router=router,
             details={"scv": scv, "objective": ch.objective,
                      "expected_wait": ch.wait, "loss_frac": ch.loss_frac},
-            # multibin routes on predicted length: name the predictor that
-            # should feed it (repro.core.predictors registry)
-            predictor=(self.length_predictor if policy == "multibin"
+            # multibin and least_work route on predicted length: name the
+            # predictor that should feed them (repro.core.predictors)
+            predictor=(self.length_predictor
+                       if policy == "multibin" or router == "least_work"
                        else None))
         # hysteresis: ignore <10% n_max moves (bin_edges revert alongside,
         # so the recommendation stays internally consistent)

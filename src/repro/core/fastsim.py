@@ -47,6 +47,14 @@ through ``KERNELS`` per cell.  ``simulate_policy_fast`` is the single-cell
 twin.  Legacy entry points (``simulate_mg1_fast``, ...) wrap the same
 kernels and keep their pre-refactor signatures.
 
+The fleet layer (:mod:`repro.core.fleet`) rides the same kernels: every
+kernel accepts a precomputed ``workload`` (a routed replica sub-stream,
+padded to power-of-two shapes so nearby sizes share compiles), the
+state-dependent routers' backlog recursion compiles to one ``lax.scan``
+carrying the per-replica backlog vector (``backlog_route``), and
+``simulate_fleet_fast`` is the fleet twin of the oracle's
+``fleet.route_oracle``.
+
 All absolute-time arithmetic runs under ``jax.experimental.enable_x64`` —
 simulated clocks reach ~1e6 seconds where float32 ULP (~0.25 s) would swamp
 the waits being measured.  Scans run with ``unroll=8``, which amortizes
@@ -95,17 +103,25 @@ def kernel(name: str):
 
 def simulate_policy_fast(policy: BatchPolicy, lam: float,
                          dist: Optional[TokenDistribution], lat,
-                         num_requests: int = 200_000, seed: int = 0) -> dict:
+                         num_requests: int = 200_000, seed: int = 0,
+                         workload=None) -> dict:
     """Fast twin of :func:`repro.core.simulate.simulate_policy`: dispatch to
     the policy's compiled kernel, or fall back to the oracle when the
-    policy has none (``fast_kernel=None``)."""
+    policy has none (``fast_kernel=None``).
+
+    ``workload`` overrides the policy's own sampling, exactly like the
+    oracle twin's parameter — the fleet layer routes one stream and runs
+    each replica's sub-workload through the unchanged kernels.  Kernels
+    pad provided workloads to power-of-two lengths (sliced off the
+    outputs) so replica sub-streams of nearby sizes share one compile."""
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         lat = single_from_batch(lat)
     if policy.fast_kernel is None:
         return simulate_policy(policy, lam, dist, lat,
-                               num_requests=num_requests, seed=seed)
+                               num_requests=num_requests, seed=seed,
+                               workload=workload)
     return KERNELS[policy.fast_kernel](policy, lam, dist, lat,
-                                       num_requests, seed)
+                                       num_requests, seed, workload=workload)
 
 
 # ----------------------------------------------------------------------------
@@ -130,22 +146,42 @@ def _impatience_scan():
     return jax.jit(run)
 
 
+def _pad_pow2_1d(arr: np.ndarray, fill: float) -> np.ndarray:
+    """Pad one row to the next power-of-two length (>= 2) so provided
+    workloads of nearby sizes (fleet replica sub-streams) share one
+    compiled shape; the padded tail is inert (arrivals at +inf never
+    join/form batches) and is sliced off every output.  Thin single-row
+    wrapper over the batch-event kernels' shared ``_pow2_rows`` layout
+    helper."""
+    return _pow2_rows([np.asarray(arr, np.float64)], fill)[0][0]
+
+
 @kernel("mg1")
-def _mg1_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+def _mg1_kernel(policy, lam, dist, lat, num_requests, seed,
+                workload=None) -> dict:
     if policy.tau is None:
         # the reference tau=None path is already a closed-form vectorized
         # Lindley recursion — it IS the fast path.
         return simulate_policy(policy, lam, dist, lat,
-                               num_requests=num_requests, seed=seed)
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
-    service = lat.service_time(wl.tokens)
+                               num_requests=num_requests, seed=seed,
+                               workload=workload)
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
+    n = len(wl.tokens)
+    service = np.asarray(lat.service_time(wl.tokens), np.float64)
+    # fleet sub-streams pad to power-of-two so replica sizes share one
+    # compile; padded tail gaps are infinite, so wait=0, lost=False
+    inter = _pad_pow2_1d(wl.inter, np.inf) if workload is not None \
+        else np.asarray(wl.inter, np.float64)
+    service = _pad_pow2_1d(service, 0.0) if workload is not None \
+        else service
     with jax.experimental.enable_x64():
         waits, lost = _impatience_scan()(
-            jnp.asarray(wl.inter, jnp.float64),
-            jnp.asarray(np.asarray(service, np.float64), jnp.float64),
+            jnp.asarray(inter, jnp.float64),
+            jnp.asarray(service, jnp.float64),
             jnp.float64(policy.tau))
-        waits = np.asarray(waits)
-        lost = np.asarray(lost)
+        waits = np.asarray(waits)[:n]
+        lost = np.asarray(lost)[:n]
     waits_w, lost_w = _warm(waits), _warm(lost)
     served = waits_w[~lost_w]
     return {
@@ -219,18 +255,28 @@ def _batch_lane_stats(starts, closed, arrivals):
 
 
 @kernel("batch_scan")
-def _batch_scan_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+def _batch_scan_kernel(policy, lam, dist, lat, num_requests, seed,
+                       workload=None) -> dict:
     elastic, b_max = policy.scan_lane()
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
+    n = len(wl.arrivals)
+    # padded arrivals at +inf never join the forming batch; their bogus
+    # singleton "batches" live past index n and are sliced off
+    arr_p = _pad_pow2_1d(wl.arrivals, np.inf) if workload is not None \
+        else wl.arrivals
+    tok_p = _pad_pow2_1d(wl.tokens, 0.0) if workload is not None \
+        else wl.tokens
     with jax.experimental.enable_x64():
         starts, closed = _batching_scan(False)(
-            jnp.asarray(wl.arrivals, jnp.float64),
-            jnp.asarray(wl.tokens, jnp.float64),
+            jnp.asarray(arr_p, jnp.float64),
+            jnp.asarray(tok_p, jnp.float64),
             jnp.float64(lat.k1), jnp.float64(lat.k2),
             jnp.float64(lat.k3), jnp.float64(lat.k4),
             jnp.asarray(bool(elastic)),
             jnp.float64(b_max if b_max is not None else _NO_CAP))
-        return _batch_lane_stats(starts, closed, wl.arrivals)
+        return _batch_lane_stats(np.asarray(starts)[:n],
+                                 np.asarray(closed)[:n], wl.arrivals)
 
 
 def simulate_dynamic_batching_fast(lam: float, dist: TokenDistribution,
@@ -252,15 +298,20 @@ def simulate_dynamic_batching_fast(lam: float, dist: TokenDistribution,
 # ----------------------------------------------------------------------------
 
 @kernel("fixed_cummax")
-def _fixed_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
+def _fixed_kernel(policy, lam, dist, lat, num_requests, seed,
+                  workload=None) -> dict:
     if "batch_time" in vars(policy):
         # an instance-level batch_time override cannot be vectorized:
         # delegate to the reference loop (same trajectory by construction)
         return simulate_policy(policy, lam, dist, lat,
-                               num_requests=num_requests, seed=seed)
+                               num_requests=num_requests, seed=seed,
+                               workload=workload)
     b = policy.b
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
-    arrivals, tokens = wl.arrivals, wl.tokens
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
+    n_served = (len(wl.arrivals) // b) * b    # provided workloads may be
+    arrivals = wl.arrivals[:n_served]         # ragged (fleet sub-streams)
+    tokens = wl.tokens[:n_served]
     arr_kb = arrivals.reshape(-1, b)
     h = np.asarray(lat.batch_time(b, tokens.reshape(-1, b).max(axis=1)),
                    np.float64)
@@ -385,8 +436,10 @@ def _multibin_loop(B: int, L: int, K: int, M: int):
 
 
 @kernel("multibin")
-def _multibin_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
+def _multibin_kernel(policy, lam, dist, lat, num_requests, seed,
+                     workload=None) -> dict:
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
     arr, tok = wl.arrivals, wl.tokens
     n = len(arr)
     # bin ROUTING keys off the predicted column; the range-max table below
@@ -399,8 +452,11 @@ def _multibin_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
     table = _sparse_max_table(tok_b)     # range max for the batch padding
     K = table.shape[0]
     b_max = np.int32(policy.b_max if policy.b_max is not None else L)
+    # output buffers padded to a power of two: one compile serves every
+    # nearby workload size (fleet replica sub-streams)
+    M = max(1 << max(n - 1, 1).bit_length(), 2)
     with jax.experimental.enable_x64():
-        nb, o_bin, o_lo, o_hi, o_start = _multibin_loop(B, L, K, n)(
+        nb, o_bin, o_lo, o_hi, o_start = _multibin_loop(B, L, K, M)(
             jnp.asarray(arr_b, jnp.float64), jnp.asarray(table, jnp.float64),
             jnp.asarray(lens, jnp.int32),
             jnp.float64(lat.k1), jnp.float64(lat.k2),
@@ -466,15 +522,17 @@ def _wait_loop(L: int, K: int, M: int):
 
 
 @kernel("wait")
-def _wait_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
+def _wait_kernel(policy, lam, dist, lat, num_requests, seed,
+                 workload=None) -> dict:
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
     arr, tok = wl.arrivals, wl.tokens
     n = len(arr)
     arr_p, _, L = _pow2_rows([arr], np.inf)
     tok_p, _, _ = _pow2_rows([tok], -np.inf)
     table = _sparse_max_table(tok_p)
     with jax.experimental.enable_x64():
-        nb, o_lo, o_hi, o_start = _wait_loop(L, table.shape[0], n)(
+        nb, o_lo, o_hi, o_start = _wait_loop(L, table.shape[0], L)(
             jnp.asarray(arr_p[0], jnp.float64),
             jnp.asarray(table, jnp.float64), jnp.int32(n),
             jnp.int32(policy.k),
@@ -608,8 +666,10 @@ def _srpt_stats(starts_rank, nb, order, arr):
 
 
 @kernel("srpt")
-def _srpt_kernel(policy, lam, dist, lat, num_requests, seed) -> dict:
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
+def _srpt_kernel(policy, lam, dist, lat, num_requests, seed,
+                 workload=None) -> dict:
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
     arr, tok = wl.arrivals, wl.tokens
     n = len(arr)
     order, tree, tok_rank, L = _srpt_rank_arrays(arr, tok,
@@ -760,3 +820,59 @@ def sweep_noise(policy_factory: Callable[[float], BatchPolicy], lam_grid,
                 out[li, si] = r["mean_wait"]
     return {"mean_wait": out, "lams": np.asarray(lam_grid),
             "sigmas": np.asarray(sigma_grid)}
+
+
+# ----------------------------------------------------------------------------
+# Fleet layer: jitted backlog routing + split-then-kernel per replica
+# ----------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _backlog_scan(R: int):
+    """The state-dependent routing recursion (jsq / least_work) as one
+    ``lax.scan`` over arrivals with an O(R) carry: decay every replica's
+    virtual backlog by the elapsed time, join the argmin (first index on
+    ties, matching ``np.argmin``), add the request's work estimate.
+    Elementary IEEE float64 ops only, so the assignments are bit-equal to
+    the NumPy reference loop in ``repro.core.fleet``."""
+
+    def run(arrivals, work):
+        def step(carry, xs):
+            v, t_prev = carry
+            a, w = xs
+            v = jnp.maximum(0.0, v - (a - t_prev))
+            r = jnp.argmin(v).astype(jnp.int32)
+            return (v.at[r].add(w), a), r
+
+        _, rs = lax.scan(step, (jnp.zeros(R, jnp.float64), jnp.float64(0.0)),
+                         (arrivals, work), unroll=_UNROLL)
+        return rs
+
+    return jax.jit(run)
+
+
+def backlog_route(arrivals, work, R: int) -> np.ndarray:
+    """Compiled twin of ``fleet._backlog_assign_np`` (replica id per
+    request); arrays padded to a power of two so fleet sweeps share
+    compiles across workload sizes."""
+    n = len(arrivals)
+    with jax.experimental.enable_x64():
+        rs = _backlog_scan(int(R))(
+            jnp.asarray(_pad_pow2_1d(arrivals, np.inf), jnp.float64),
+            jnp.asarray(_pad_pow2_1d(work, 0.0), jnp.float64))
+        return np.asarray(rs, np.int64)[:n]
+
+
+def simulate_fleet_fast(router, policy: BatchPolicy, lam: float, R: int,
+                        dist: Optional[TokenDistribution], lat,
+                        num_requests: int = 100_000, seed: int = 0) -> dict:
+    """Fast twin of :func:`repro.core.fleet.route_oracle`: the router's
+    split is identical (state-dependent assignment via the jitted backlog
+    scan), and each replica's sub-workload runs through the policy's
+    compiled single-server kernel (oracle fallback when it has none)."""
+    from repro.core.fleet import router_from_spec, run_fleet
+    router = router_from_spec(router)
+    fw = router.fleet_workload(policy, lam, dist, lat, num_requests, seed,
+                               R, fast=True)
+    return run_fleet(fw, policy, lat, dist,
+                     lambda pol, wl: simulate_policy_fast(
+                         pol, lam, dist, lat, workload=wl))

@@ -676,11 +676,15 @@ class WaitPolicy(BatchPolicy):
     heavy-traffic throughput optimality in Dai et al.  ``timeout=None`` is
     the pure threshold rule (the end of a finite stream still flushes the
     last ``< k`` stragglers).  No closed-form mean delay is known (Dai et
-    al. prove throughput optimality, not a delay formula), so
-    ``analytic_kind`` stays None."""
+    al. prove throughput optimality, not a delay formula), but the
+    M/D^k/1-like holding + clearing envelope :func:`repro.core.bulk.
+    wait_bound` (positional trigger hold, timer-capped, plus Inoue's
+    serve-all-waiting arm) upper-bounds it — ``analytic_kind='bound'``
+    whenever the serve-all assumption holds (``b_max=None``)."""
 
     name = "wait"
     fast_kernel = "wait"
+    analytic_kind = "bound"       # holding + clearing envelope (bulk.wait_bound)
 
     def __init__(self, k: int = 8, timeout: Optional[float] = None,
                  n_max: Optional[int] = None, b_max: Optional[int] = None,
@@ -690,6 +694,11 @@ class WaitPolicy(BatchPolicy):
         self.k = int(k)
         self.timeout = timeout
         self.b_max = b_max
+        if b_max is not None:
+            # the clearing arm assumes serve-ALL-arrived at the trigger; a
+            # batch cap lowers throughput, so the envelope no longer
+            # dominates the capped system
+            self.analytic_kind = None
 
     def formation(self, arrivals, tokens, dist=None, predicted=None):
         # membership is arrival-count/timer-driven: prediction-insensitive
@@ -697,6 +706,14 @@ class WaitPolicy(BatchPolicy):
 
     def batch_time(self, ns, lat) -> float:
         return float(lat.batch_time(len(ns), ns.max()))
+
+    def analytic_delay(self, lam, dist, lat) -> Optional[float]:
+        from repro.core.bulk import wait_bound
+        if self.b_max is not None:
+            return None
+        return wait_bound(dist if self.n_max is None
+                          else dist.clip(self.n_max),
+                          lat, lam, self.k, self.timeout)["wait_bound"]
 
 
 @register

@@ -48,6 +48,12 @@ mention every one):
     (``fit``).  The features are a synthetic observation model (K noisy
     views of the true log-length standing in for prompt signals); a real
     deployment would substitute an embedding of the prompt.
+  * ``prompt_features``  — the real-prompt twin of ``learned``: the same
+    ridge head, but over features computed from the actual prompt token
+    arrays flowing through ``predict(key, true, prompts)`` (length stats
+    + token-id statistics), trained on served (prompt, output-length)
+    pairs (``fit_requests``).  The first predictor that never peeks at
+    the true lengths.
 """
 
 from __future__ import annotations
@@ -264,6 +270,73 @@ class LearnedPredictor(LengthPredictor):
         return np.maximum(np.exp(X @ self._coef), 1.0)
 
 
+@register_predictor
+class PromptFeaturePredictor(LengthPredictor):
+    """A length predictor driven by REAL prompt-derived features — the
+    first predictor whose ``prompts`` argument (already plumbed through
+    ``predict(key, true, prompts)`` on every serving layer) is load-
+    bearing.  Ridge regression from per-prompt features to log-length,
+    reusing the :class:`LearnedPredictor` recipe but with an observation
+    model the serving layers actually possess: the prompt token array.
+
+    Features per prompt: [1, log1p(len), sqrt(len), mean token id (scaled)]
+    — length carries the signal when the workload's prompt lengths
+    correlate with output requirements
+    (:func:`repro.data.pipeline.make_request_stream` with
+    ``prompt_len_corr > 0``; real traces have exactly this shape), the id
+    statistic is a cheap content stand-in.  Train on (prompt, observed
+    output length) pairs with :meth:`fit_requests` — in production these
+    are the completions the serving engine has already returned.
+
+    ``predict`` never reads ``true_lengths`` (only their count): unlike
+    the synthetic noise models, its information comes solely from the
+    prompts.  Without prompts (the prompt-less simulator layers) or
+    before fitting it falls back to the training marginal — a constant
+    prediction, the honest no-information answer."""
+
+    name = "prompt_features"
+
+    def __init__(self, ridge: float = 1e-3):
+        self.ridge = float(ridge)
+        self._coef: Optional[np.ndarray] = None
+        self._y_mean: float = np.log(256.0)     # unfitted fallback marginal
+
+    # ---------------- observation model ----------------
+    @staticmethod
+    def _features(prompts) -> np.ndarray:
+        lens = np.asarray([len(p) for p in prompts], np.float64)
+        means = np.asarray([float(np.mean(p)) if len(p) else 0.0
+                            for p in prompts], np.float64)
+        return np.stack([np.ones_like(lens), np.log1p(lens), np.sqrt(lens),
+                         means / 1000.0], axis=1)
+
+    # ---------------- training ----------------
+    def fit_requests(self, reqs) -> "PromptFeaturePredictor":
+        """Train on served requests (``repro.data.pipeline.Request``):
+        prompt features -> log observed output length."""
+        X = self._features([r.prompt_tokens for r in reqs])
+        y = np.log(np.maximum([r.target_output_tokens for r in reqs], 1.0))
+        A = X.T @ X + self.ridge * np.eye(X.shape[1])
+        self._coef = np.linalg.solve(A, X.T @ y)
+        self._y_mean = float(np.mean(y))
+        return self
+
+    @classmethod
+    def fitted_on(cls, reqs, **kwargs) -> "PromptFeaturePredictor":
+        return cls(**kwargs).fit_requests(reqs)
+
+    # ---------------- inference ----------------
+    def predict(self, key, true_lengths, prompts=None) -> np.ndarray:
+        n = len(true_lengths)
+        if prompts is None or self._coef is None or len(prompts) < n:
+            # no prompt signal: the training marginal (constant) — keeps
+            # the prompt-less simulator layers running with honest
+            # no-information predictions
+            return np.full(n, max(float(np.exp(self._y_mean)), 1.0))
+        return np.maximum(np.exp(self._features(prompts[:n]) @ self._coef),
+                          1.0)
+
+
 def prediction_log_rmse(pred: np.ndarray, true: np.ndarray) -> float:
     """Root-mean-square log error — the scale on which ``lognormal_noise``'s
     sigma lives, so predictor families are comparable at matched error."""
@@ -282,9 +355,25 @@ def predictor_from_spec(spec) -> LengthPredictor:
     return get_predictor(spec.pop("kind"), **spec)
 
 
+def resolve_predictions(policy, predictor, key, true_lengths: np.ndarray,
+                        prompts: Optional[Sequence] = None):
+    """The predicted-length column for a request batch, resolved ONCE for
+    every serving-layer consumer (``PolicyScheduler``,
+    ``run_engine_schedule``, ``FleetScheduler``, ``run_fleet_schedule``):
+    an explicit ``predictor`` (instance / registry name / spec dict)
+    overrides the policy's own; None with no policy predictor means oracle
+    semantics (formation falls back to the true lengths).  One definition
+    so the layers cannot diverge on the convention."""
+    if predictor is not None:
+        return predictor_from_spec(predictor).predict(key, true_lengths,
+                                                      prompts)
+    return policy.predict_lengths(key, true_lengths, prompts)
+
+
 __all__ = [
     "AdditiveNoisePredictor", "BucketPredictor", "LearnedPredictor",
     "LengthPredictor", "LogNormalNoisePredictor", "OraclePredictor",
+    "PromptFeaturePredictor",
     "PREDICTORS", "get_predictor", "prediction_log_rmse",
-    "predictor_from_spec", "register_predictor",
+    "predictor_from_spec", "register_predictor", "resolve_predictions",
 ]

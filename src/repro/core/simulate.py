@@ -61,15 +61,22 @@ def oracle(kind: str):
 
 def simulate_policy(policy: BatchPolicy, lam: float,
                     dist: Optional[TokenDistribution], lat,
-                    num_requests: int = 200_000, seed: int = 0) -> dict:
+                    num_requests: int = 200_000, seed: int = 0,
+                    workload: Optional[Workload] = None) -> dict:
     """Run ``policy`` through its reference event loop.  ``lat`` is the
     policy's latency law (``LatencyModel`` for single-service policies,
     ``BatchLatencyModel`` otherwise — a batch law handed to a
-    single-service policy is converted via ``single_from_batch``)."""
+    single-service policy is converted via ``single_from_batch``).
+
+    ``workload`` overrides the policy's own sampling (``lam``,
+    ``num_requests`` and ``seed`` are then ignored) — the fleet layer
+    (:mod:`repro.core.fleet`) uses this to run a routed sub-stream through
+    the unchanged single-server event loops."""
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         from repro.core.policies import single_from_batch
         lat = single_from_batch(lat)
-    wl = policy.sample_workload(lam, dist, num_requests, seed)
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
     return ORACLES[policy.oracle_kind](policy, wl, lat, dist)
 
 

@@ -89,16 +89,37 @@ class Request:
         return self.start_time - self.arrival
 
 
+def correlated_prompt_len(out_tokens: float, corr: float,
+                          rng: np.random.Generator,
+                          lo: int = 4, hi: int = 512) -> int:
+    """Prompt length correlated with the output requirement: longer asks
+    tend to come with longer prompts (log-linear, plus noise).  ``corr``
+    scales the informative slope — the signal a prompt-feature length
+    predictor (:class:`repro.core.predictors.PromptFeaturePredictor`) can
+    actually learn from."""
+    plen = corr * 10.0 * np.log1p(float(out_tokens)) + rng.normal(0.0, 2.0)
+    return int(np.clip(round(plen), lo, hi))
+
+
 def make_request_stream(num: int, lam: float, dist: TokenDistribution,
                         vocab: int, prompt_len_range=(8, 64),
-                        seed: int = 0):
-    """Poisson arrivals + iid output-token requirements (the paper's model)."""
+                        seed: int = 0, prompt_len_corr: float = 0.0):
+    """Poisson arrivals + iid output-token requirements (the paper's model).
+
+    ``prompt_len_corr=0`` (default) keeps prompt lengths independent of
+    the output requirement — the historical stream, bit-identical to
+    earlier seeds.  ``prompt_len_corr>0`` draws prompt lengths from
+    :func:`correlated_prompt_len` instead, giving prompt-derived length
+    predictors a real signal."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / lam, num))
     outs = dist.sample(rng, num)
     reqs = []
     for i in range(num):
-        plen = int(rng.integers(*prompt_len_range))
+        if prompt_len_corr:
+            plen = correlated_prompt_len(outs[i], prompt_len_corr, rng)
+        else:
+            plen = int(rng.integers(*prompt_len_range))
         reqs.append(Request(
             rid=i, arrival=float(arrivals[i]),
             prompt_tokens=rng.integers(0, vocab, plen).astype(np.int32),

@@ -6,6 +6,9 @@ from repro.serving.scheduler import (
     PolicyScheduler, run_engine_schedule, run_schedule,
 )
 from repro.serving.metrics import summarize
+from repro.serving.router import (
+    FleetScheduleResult, FleetScheduler, run_fleet_schedule, summarize_fleet,
+)
 from repro.serving.continuous import serve_continuous, splice_cache
 
 __all__ = [
@@ -14,6 +17,8 @@ __all__ = [
     "ElasticBatchScheduler", "ContinuousBatchScheduler",
     "MultiBinBatchScheduler", "WaitBatchScheduler", "SRPTBatchScheduler",
     "PolicyScheduler", "run_engine_schedule", "run_schedule",
+    "FleetScheduleResult", "FleetScheduler", "run_fleet_schedule",
+    "summarize_fleet",
     "summarize",
     "serve_continuous", "splice_cache",
 ]

@@ -35,7 +35,10 @@ Both the adapter and ``run_engine_schedule`` accept a *length predictor*
 PREDICTED output lengths while clipping and service use the true ones —
 the same predicted-vs-true convention the simulator layers follow, so a
 noisy predictor degrades the scheduler exactly like the fast sweep says
-it should.
+it should.  Resolution goes through the ONE shared
+:func:`repro.core.predictors.resolve_predictions`; the fleet layer
+(:mod:`repro.serving.router`) reuses it and drives R of these schedulers
+behind a :mod:`repro.core.fleet` routing policy.
 """
 
 from __future__ import annotations
@@ -102,20 +105,17 @@ class EngineClock:
 # Generic policy adapter (virtual timeline)
 # ----------------------------------------------------------------------------
 
-def _resolve_predictions(policy: BatchPolicy, predictor, predict_seed: int,
+def _request_predictions(policy: BatchPolicy, predictor, predict_seed: int,
                          ns: np.ndarray, reqs: List[Request]):
-    """The predicted-length column for a request list: an explicit
-    ``predictor`` (instance / registry name / spec dict) overrides the
-    policy's own; None with no policy predictor means oracle semantics
-    (formation falls back to the true lengths).  One definition shared by
-    ``PolicyScheduler`` and ``run_engine_schedule`` so the scheduler and
-    engine layers cannot diverge on the convention."""
+    """Predicted-length column for a request list — a thin prompt-plumbing
+    wrapper over the ONE shared resolver
+    (:func:`repro.core.predictors.resolve_predictions`), used by
+    ``PolicyScheduler``, ``run_engine_schedule`` and the fleet layer
+    (:mod:`repro.serving.router`) alike."""
+    from repro.core.predictors import resolve_predictions
     prompts = [r.prompt_tokens for r in reqs[:len(ns)]]
-    if predictor is not None:
-        from repro.core.predictors import predictor_from_spec
-        return predictor_from_spec(predictor).predict(predict_seed, ns,
-                                                      prompts)
-    return policy.predict_lengths(predict_seed, ns, prompts)
+    return resolve_predictions(policy, predictor, predict_seed, ns, prompts)
+
 
 @dataclasses.dataclass
 class ScheduleResult:
@@ -149,7 +149,12 @@ class PolicyScheduler:
         self.predictor = predictor
         self.predict_seed = predict_seed
 
-    def run(self, reqs: List[Request]) -> ScheduleResult:
+    def run(self, reqs: List[Request],
+            predicted: Optional[np.ndarray] = None) -> ScheduleResult:
+        """``predicted`` overrides the per-request predicted lengths (the
+        fleet layer passes slices of ONE globally-drawn column so routing
+        and membership see the same predictions); None resolves them from
+        the configured predictor."""
         pol = self.policy
         n = pol.schedule_length(len(reqs))
         arr = np.array([r.arrival for r in reqs[:n]])
@@ -160,8 +165,11 @@ class PolicyScheduler:
         e2e = np.zeros(n)
         lost = np.zeros(n, bool)
         sizes = []
-        fs = pol.formation(arr, ns, predicted=_resolve_predictions(
-            pol, self.predictor, self.predict_seed, ns, reqs))
+        if predicted is None:
+            predicted = _request_predictions(
+                pol, self.predictor, self.predict_seed, ns, reqs)
+        fs = pol.formation(arr, ns, predicted=(
+            None if predicted is None else predicted[:n]))
         t_free = 0.0
         while (nb := fs.next_batch(t_free)) is not None:
             start, idx = nb
@@ -329,8 +337,9 @@ class ContinuousBatchScheduler:
 # ----------------------------------------------------------------------------
 
 def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
-                        predictor=None,
-                        predict_seed: int = 0) -> ScheduleResult:
+                        predictor=None, predict_seed: int = 0,
+                        predicted: Optional[np.ndarray] = None
+                        ) -> ScheduleResult:
     """Form batches with ``policy`` on the request stream's virtual arrival
     timeline, but execute each batch on the REAL engine (prefill + fused
     chunked decode); batch durations are wall-clock seconds.  Works for any
@@ -340,7 +349,8 @@ def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
     None keeps ``policy.predictor``) feeds formation's membership/ordering
     with PREDICTED lengths; the engine still decodes each request to its
     true ``target_output_tokens`` — mispredictions show up as real padded
-    wall-clock, exactly like in production."""
+    wall-clock, exactly like in production.  ``predicted`` bypasses the
+    resolution with an explicit column (fleet layer)."""
     clock = EngineClock(engine)
     n = policy.schedule_length(len(reqs))
     arr = np.array([r.arrival for r in reqs[:n]])
@@ -350,8 +360,11 @@ def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
     waits = np.zeros(n)
     e2e = np.zeros(n)
     sizes = []
-    fs = policy.formation(arr, ns, predicted=_resolve_predictions(
-        policy, predictor, predict_seed, ns, reqs))
+    if predicted is None:
+        predicted = _request_predictions(policy, predictor, predict_seed,
+                                         ns, reqs)
+    fs = policy.formation(arr, ns, predicted=(
+        None if predicted is None else predicted[:n]))
     t_free = 0.0
     while (nb := fs.next_batch(t_free)) is not None:
         start, idx = nb

@@ -1,0 +1,430 @@
+"""Fleet-layer agreement suite (routing across parallel batched replicas).
+
+Pins the contract of :mod:`repro.core.fleet` + :mod:`repro.serving.router`:
+
+  * router-oracle ≡ fastsim: identical routing decisions and per-replica
+    wait trajectories for every (router, policy) pair;
+  * the ``random`` router's exact superposition split: each replica is
+    BIT-EQUAL to the single-server model at λ/R, so the single-server
+    analytic forms transfer with their own ``analytic_kind``;
+  * the ``jsq`` two-moment balanced-split approximation (Whitt QNA);
+  * routing-quality ordering at matched load: least_work <= jsq <=
+    round_robin <= random, power-of-d between jsq and random;
+  * an R=1 fleet degenerates to the existing single-server path for every
+    registered policy;
+  * the serving layer (``FleetScheduler``) agrees statistically with the
+    fleet oracle, and ``run_fleet_schedule`` executes on the real engine;
+  * satellites: ``bulk.wait_bound`` (WAIT joins the analytic
+    cross-checks), ``PromptFeaturePredictor`` (real prompt features feed
+    ``least_work``), and the controller's replicas/router axis.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.distributions import LogNormalTokens, UniformTokens
+from repro.core.latency_model import BatchLatencyModel
+from repro.core.policies import (
+    DynamicPolicy, ElasticPolicy, MultiBinPolicy, SRPTPolicy, WaitPolicy,
+    default_policies, single_from_batch)
+from repro.core.fleet import (
+    ROUTERS, _backlog_assign_np, default_routers, fleet_analytic_delay,
+    fleet_analytic_kind, recommend_replicas, route_oracle, router_from_spec,
+    sweep)
+from repro.core.fastsim import (
+    backlog_route, simulate_fleet_fast, simulate_policy_fast)
+from repro.core.simulate import simulate_policy
+from repro.data.pipeline import make_request_stream
+from repro.serving.metrics import summarize
+from repro.serving.router import (
+    FleetScheduler, run_fleet_schedule, summarize_fleet)
+from repro.serving.scheduler import ModelClock
+
+UNI = UniformTokens(1000)
+LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+LN = LogNormalTokens(7.0, 0.7)
+HT = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+CLOCK = ModelClock(single_from_batch(LAT), LAT)
+
+ROUTER_SET = default_routers()
+# the acceptance set: every length-signal path (padded, early-exit,
+# binned, ordered membership) behind every router
+PAIR_POLICIES = {
+    "dynamic": DynamicPolicy(b_max=8),
+    "elastic": ElasticPolicy(),
+    "multibin": MultiBinPolicy(num_bins=4),
+    "srpt": SRPTPolicy(b_max=8),
+}
+
+
+def test_registry_covers_all_routers():
+    assert {"random", "round_robin", "power_of_d", "jsq",
+            "least_work"} == set(ROUTERS)
+    assert set(ROUTERS) == {type(r).name for r in ROUTER_SET.values()}
+
+
+def test_router_from_spec():
+    assert router_from_spec("jsq").name == "jsq"
+    assert router_from_spec({"kind": "power_of_d", "d": 3}).d == 3
+    r = ROUTER_SET["least_work"]
+    assert router_from_spec(r) is r
+
+
+@pytest.mark.parametrize("pname", sorted(PAIR_POLICIES))
+@pytest.mark.parametrize("rname", sorted(ROUTER_SET))
+def test_fleet_oracle_vs_fast_trajectory_equal(rname, pname):
+    """For every (router, policy) pair: the fast fleet makes the SAME
+    routing decisions and reproduces the oracle's per-replica wait
+    trajectories (the per-replica kernels are already pinned, so this is
+    chiefly a routing-equality pin — incl. the jitted backlog scan)."""
+    router, pol = ROUTER_SET[rname], PAIR_POLICIES[pname]
+    o = route_oracle(router, pol, 0.6, 3, UNI, LAT,
+                     num_requests=6_000, seed=7)
+    f = simulate_fleet_fast(router, pol, 0.6, 3, UNI, LAT,
+                            num_requests=6_000, seed=7)
+    assert np.array_equal(o["replica_of"], f["replica_of"])
+    for po, pf in zip(o["per_replica"], f["per_replica"]):
+        np.testing.assert_allclose(pf["waits"], po["waits"],
+                                   rtol=1e-6, atol=1e-9)
+    assert abs(o["mean_wait"] - f["mean_wait"]) < 1e-6
+
+
+@pytest.mark.parametrize("pname", sorted(default_policies()))
+def test_random_split_replicas_bit_equal_single_server(pname):
+    """The exact M/G/R split: under the ``random`` router each replica's
+    trajectory is BIT-equal to the single-server model at λ/R (same
+    per-replica seeds), on the oracle AND the fast layer."""
+    pol = default_policies()[pname]
+    lam, R, n = 0.21, 3, 9_000
+    o = route_oracle("random", pol, lam, R, UNI, LAT,
+                     num_requests=n, seed=5)
+    f = simulate_fleet_fast("random", pol, lam, R, UNI, LAT,
+                            num_requests=n, seed=5)
+    for r in range(R):
+        ref = simulate_policy(pol, lam / R, UNI, LAT,
+                              num_requests=n // R, seed=(5, r))
+        assert np.array_equal(o["per_replica"][r]["waits"], ref["waits"])
+        ref_f = simulate_policy_fast(pol, lam / R, UNI, LAT,
+                                     num_requests=n // R, seed=(5, r))
+        assert np.array_equal(f["per_replica"][r]["waits"], ref_f["waits"])
+
+
+def test_random_split_analytic_transfer():
+    """Every single-server ``analytic_kind`` transfers through the random
+    split: the fleet closed form IS the policy's at λ/R, and it stands in
+    the same relation (exact / bound / approx) to the fleet simulation —
+    WAIT included, now that ``bulk.wait_bound`` gives it a bound."""
+    lam, R = 0.21, 3
+    checked = []
+    for name, pol in default_policies().items():
+        kind = fleet_analytic_kind("random", pol)
+        assert kind == pol.analytic_kind
+        ana = fleet_analytic_delay("random", pol, lam, R, UNI, LAT)
+        if kind is None:
+            assert ana is None
+            continue
+        assert ana == pol.analytic_delay(lam / R, UNI, LAT)
+        sim = simulate_fleet_fast("random", pol, lam, R, UNI, LAT,
+                                  num_requests=90_000, seed=11)["mean_wait"]
+        if kind == "exact":
+            assert abs(ana - sim) / max(sim, 1e-9) < 0.10, (name, ana, sim)
+        elif kind == "bound":
+            assert ana >= sim * 0.95, (name, ana, sim)
+            assert ana <= max(sim * 4.0, 1.0), (name, ana, sim)
+        else:  # approx
+            assert abs(ana - sim) / max(sim, 1e-9) < 0.35, (name, ana, sim)
+        checked.append(kind)
+    # the transfer must have exercised every analytic family
+    assert {"exact", "bound", "approx"} <= set(checked)
+
+
+def test_jsq_two_moment_approx():
+    """jsq + FCFS replicas: the Whitt/QNA balanced-split two-moment
+    formula tracks simulation across (λ, R) cells, and is registered as
+    ``analytic_kind='approx'`` through the same machinery."""
+    from repro.core.policies import FCFSPolicy
+    pol = FCFSPolicy()
+    assert fleet_analytic_kind("jsq", pol) == "approx"
+    assert fleet_analytic_kind("jsq", DynamicPolicy()) is None
+    assert fleet_analytic_kind("round_robin", pol) is None
+    for lam, R in ((0.2, 3), (0.25, 3), (0.5, 8)):
+        ana = fleet_analytic_delay("jsq", pol, lam, R, UNI, LAT)
+        sim = simulate_fleet_fast("jsq", pol, lam, R, UNI, LAT,
+                                  num_requests=60_000, seed=5)["mean_wait"]
+        assert abs(ana - sim) / max(sim, 1e-9) < 0.30, (lam, R, ana, sim)
+
+
+def test_router_ordering_heavy_tail():
+    """Routing quality at matched load (heavy-tail lengths, SRPT
+    replicas): least_work <= jsq <= round_robin <= random, with
+    power-of-d between jsq and random — and the prediction-aware
+    least_work strictly beating the length-blind jsq."""
+    lam, R, n = 1.6, 4, 40_000
+    w = {name: simulate_fleet_fast(router, SRPTPolicy(b_max=16), lam, R,
+                                   LN, HT, num_requests=n, seed=3)
+         ["mean_wait"]
+         for name, router in ROUTER_SET.items()}
+    assert w["least_work"] < 0.95 * w["jsq"], w
+    assert w["jsq"] <= w["round_robin"] * 1.02, w
+    assert w["round_robin"] <= w["random"] * 1.02, w
+    assert w["jsq"] * 0.98 <= w["power_of_2"] <= w["random"] * 1.02, w
+
+
+@pytest.mark.parametrize("pname", sorted(default_policies()))
+def test_r1_fleet_equals_single_server(pname):
+    """A one-replica fleet IS the single-server path, bit-equal, for
+    every registered policy and any router (R=1 bypasses assignment)."""
+    pol = default_policies()[pname]
+    n = 2_000 if pol.name == "continuous" else 4_000
+    ref = simulate_policy(pol, 0.2, UNI, LAT, num_requests=n, seed=3)
+    for rname in ("jsq", "random"):
+        o = route_oracle(rname, pol, 0.2, 1, UNI, LAT,
+                         num_requests=n, seed=3)
+        assert np.array_equal(o["per_replica"][0]["waits"], ref["waits"])
+        assert o["mean_wait"] == pytest.approx(ref["mean_wait"], abs=1e-12)
+    f = simulate_fleet_fast("jsq", pol, 0.2, 1, UNI, LAT,
+                            num_requests=n, seed=3)
+    ref_f = simulate_policy_fast(pol, 0.2, UNI, LAT, num_requests=n, seed=3)
+    assert np.array_equal(f["per_replica"][0]["waits"], ref_f["waits"])
+
+
+def test_backlog_route_jit_matches_numpy():
+    rng = np.random.default_rng(0)
+    arr = np.cumsum(rng.exponential(1.0, 5_000))
+    work = rng.exponential(10.0, 5_000)
+    np_assign = _backlog_assign_np(arr, work, 5)
+    assert np.array_equal(backlog_route(arr, work, 5), np_assign)
+    assert len(np.unique(np_assign)) == 5
+
+
+def test_fleet_sweep_scaling_curve():
+    """fleet.sweep: delay vs R at fixed TOTAL λ — adding replicas
+    monotonically cuts the mean wait (the scaling-curve surface)."""
+    grid = sweep([1, 2, 4], [0.6], "jsq", DynamicPolicy(b_max=8), UNI, LAT,
+                 num_requests=12_000, seed=3)
+    mw = grid["mean_wait"][:, 0]
+    assert grid["mean_wait"].shape == (3, 1)
+    assert mw[0] > mw[1] > mw[2]
+    assert np.isfinite(mw).all()
+
+
+def test_fleet_scheduler_matches_oracle():
+    """Serving layer: FleetScheduler (R PolicyScheduler timelines) agrees
+    statistically with the fleet oracle on an independent stream, and the
+    fleet metrics decompose per replica."""
+    lam, R, n = 0.6, 3, 20_000
+    reqs = make_request_stream(n, lam=lam, dist=UNI, vocab=100, seed=11)
+    for rname in ("least_work", "round_robin"):
+        res = FleetScheduler(rname, DynamicPolicy(b_max=8), CLOCK, R).run(
+            reqs)
+        s = summarize_fleet(res)
+        o = route_oracle(rname, DynamicPolicy(b_max=8), lam, R, UNI, LAT,
+                         num_requests=n, seed=11)
+        assert abs(s["mean_wait"] - o["mean_wait"]) / \
+            max(o["mean_wait"], 0.1) < 0.15, (rname, s["mean_wait"], o)
+        assert sum(s["replica_requests"]) == n
+        assert len(s["per_replica"]) == R
+        assert all(p is not None and np.isfinite(p["mean_wait"])
+                   for p in s["per_replica"])
+        assert not res.lost.any()      # dynamic serves everyone
+
+
+def test_fleet_scheduler_runs_continuous_policy():
+    """Continuous batching binds its own scheduler; the fleet adapter
+    must route to it rather than the generic formation walker."""
+    from repro.core.policies import ContinuousPolicy
+    reqs = make_request_stream(2_000, lam=0.6, dist=UNI, vocab=100, seed=4)
+    res = FleetScheduler("round_robin", ContinuousPolicy(slots=8), CLOCK,
+                         2).run(reqs)
+    s = summarize_fleet(res)
+    assert np.isfinite(s["mean_wait"]) and not res.lost.any()
+    assert sum(s["replica_requests"]) == len(reqs)
+
+
+def test_fleet_scheduler_least_work_prompt_predictor():
+    """The satellite loop closed end-to-end: a PromptFeaturePredictor
+    fitted on served (prompt, length) pairs drives least_work dispatch on
+    the serving layer and beats random routing under heavy-tail lengths
+    — a non-synthetic estimator behind prediction-aware routing."""
+    from repro.core.fleet import LeastWorkRouter
+    from repro.core.predictors import PromptFeaturePredictor
+    train = make_request_stream(6_000, lam=1.6, dist=LN, vocab=100, seed=1,
+                                prompt_len_corr=1.0)
+    pred = PromptFeaturePredictor.fitted_on(train)
+    reqs = make_request_stream(20_000, lam=1.6, dist=LN, vocab=100, seed=2,
+                               prompt_len_corr=1.0)
+    clock = ModelClock(single_from_batch(HT), HT)
+    pol = SRPTPolicy(b_max=16)
+    router = LeastWorkRouter(predictor=pred)
+    res = FleetScheduler(router, pol, clock, 4).run(reqs)
+    lw = summarize(res)
+    rnd = summarize(FleetScheduler("random", pol, clock, 4).run(reqs))
+    assert lw["mean_wait"] < rnd["mean_wait"], (lw, rnd)
+    # the prompt signal must actually reach the router: its work estimates
+    # are prompt-driven (non-constant, correlated with the true lengths),
+    # so routing differs from the length-blind jsq assignment
+    from repro.core.policies import Workload
+    ns = np.array([r.target_output_tokens for r in reqs], np.float64)
+    work = router.routing_work(
+        Workload(arrivals=np.array([r.arrival for r in reqs]), tokens=ns),
+        single_from_batch(HT), 0,
+        prompts=[r.prompt_tokens for r in reqs])
+    assert np.std(work) > 0, "prompt predictor fell back to a constant"
+    assert np.corrcoef(np.log(work), np.log(np.maximum(ns, 1)))[0, 1] > 0.5
+    jsq = FleetScheduler("jsq", pol, clock, 4).run(reqs)
+    assert (res.replica_of != jsq.replica_of).any()
+
+
+@pytest.fixture(scope="module")
+def engine():
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import Engine, EngineConfig
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-3b"), num_layers=2)
+    return Engine(cfg, EngineConfig(max_batch=4, max_seq=128,
+                                    prompt_bucket=16))
+
+
+def test_run_fleet_schedule_on_engine(engine):
+    """Engine layer: a routed fleet executes each replica's batches on
+    the REAL engine (one shared engine, replica-tagged batches)."""
+    rng = np.random.default_rng(0)
+    reqs = make_request_stream(8, lam=5.0, dist=UNI, vocab=50, seed=2)
+    for r in reqs:                      # keep the smoke model's decode short
+        r.target_output_tokens = int(rng.integers(2, 12))
+    res = run_fleet_schedule("round_robin", DynamicPolicy(b_max=4), engine,
+                             reqs, R=2, lat=LAT)
+    assert np.isfinite(res.waits).all() and (res.waits >= 0).all()
+    assert (res.e2e >= res.waits).all()
+    assert sum(res.batch_sizes) == len(reqs)
+    assert len(res.per_replica) == 2
+    assert set(np.unique(res.replica_of)) == {0, 1}
+    assert not res.lost.any()
+    s = summarize_fleet(res)
+    assert s["replica_requests"] == [4, 4]
+
+
+# ----------------------------------------------------------------------------
+# Satellite: bulk.wait_bound — WAIT joins the analytic cross-checks
+# ----------------------------------------------------------------------------
+
+def test_wait_bound_shape_and_dominance():
+    from repro.core.bulk import wait_bound
+    assert WaitPolicy(k=8).analytic_kind == "bound"
+    assert WaitPolicy(k=8, b_max=4).analytic_kind is None
+    assert WaitPolicy(k=8, b_max=4).analytic_delay(0.2, UNI, LAT) is None
+    for lam in (0.1, 0.4):
+        pol = WaitPolicy(k=8)
+        ana = pol.analytic_delay(lam, UNI, LAT)
+        sim = simulate_policy_fast(pol, lam, UNI, LAT,
+                                   num_requests=60_000, seed=11)["mean_wait"]
+        assert ana >= sim * 0.95, (lam, ana, sim)
+        assert ana <= max(sim * 4.0, 1.0), (lam, ana, sim)
+    # the hold arm: (k-1)/(2λ) positional mean without a timer
+    d = wait_bound(UNI, LAT, 0.1, k=8)
+    assert d["hold_arm"] == pytest.approx(7 / (2 * 0.1))
+    assert d["wait_bound"] == d["hold_arm"] + d["clearing_arm"]
+
+
+def test_wait_bound_timer_caps_holding_and_k_monotone():
+    from repro.core.bulk import wait_bound
+    lam = 0.05
+    pure = wait_bound(UNI, LAT, lam, k=50)
+    timed = wait_bound(UNI, LAT, lam, k=50, timeout=5.0)
+    assert timed["hold_arm"] <= 5.0 < pure["hold_arm"]
+    assert timed["wait_bound"] < pure["wait_bound"]
+    # more holding, more bound
+    assert wait_bound(UNI, LAT, 0.2, k=4)["wait_bound"] < \
+        wait_bound(UNI, LAT, 0.2, k=16)["wait_bound"]
+
+
+def test_wait_bound_transfers_through_random_split():
+    """The new WAIT bound rides the fleet transfer: at R replicas under
+    the random split the bound at λ/R dominates the fleet simulation."""
+    lam, R = 0.6, 3
+    pol = WaitPolicy(k=8)
+    ana = fleet_analytic_delay("random", pol, lam, R, UNI, LAT)
+    assert fleet_analytic_kind("random", pol) == "bound"
+    sim = simulate_fleet_fast("random", pol, lam, R, UNI, LAT,
+                              num_requests=45_000, seed=9)["mean_wait"]
+    assert ana >= sim * 0.95
+    assert ana <= max(sim * 4.0, 1.0)
+
+
+# ----------------------------------------------------------------------------
+# Satellite: PromptFeaturePredictor — real prompt features
+# ----------------------------------------------------------------------------
+
+def test_prompt_feature_predictor_learns_correlated_prompts():
+    from repro.core.predictors import (
+        PREDICTORS, PromptFeaturePredictor, prediction_log_rmse)
+    assert "prompt_features" in PREDICTORS
+    train = make_request_stream(8_000, lam=0.5, dist=LN, vocab=100, seed=1,
+                                prompt_len_corr=1.0)
+    test = make_request_stream(4_000, lam=0.5, dist=LN, vocab=100, seed=2,
+                               prompt_len_corr=1.0)
+    p = PromptFeaturePredictor.fitted_on(train)
+    true = np.array([r.target_output_tokens for r in test], np.float64)
+    prompts = [r.prompt_tokens for r in test]
+    rmse = prediction_log_rmse(p.predict(0, true, prompts), true)
+    const = prediction_log_rmse(
+        np.full(len(true), np.exp(np.mean(np.log(true)))), true)
+    assert rmse < 0.6 * const          # the prompt signal is real
+    # deterministic given the prompts (no hidden access to true lengths)
+    assert np.array_equal(p.predict(0, true, prompts),
+                          p.predict(99, np.ones_like(true), prompts))
+
+
+def test_prompt_feature_predictor_honest_without_signal():
+    from repro.core.predictors import (
+        PromptFeaturePredictor, prediction_log_rmse)
+    # uncorrelated prompts: no better than the marginal (no length leak)
+    train = make_request_stream(8_000, lam=0.5, dist=LN, vocab=100, seed=1)
+    test = make_request_stream(4_000, lam=0.5, dist=LN, vocab=100, seed=2)
+    p = PromptFeaturePredictor.fitted_on(train)
+    true = np.array([r.target_output_tokens for r in test], np.float64)
+    rmse = prediction_log_rmse(
+        p.predict(0, true, [r.prompt_tokens for r in test]), true)
+    const = prediction_log_rmse(
+        np.full(len(true), np.exp(np.mean(np.log(true)))), true)
+    assert rmse > 0.9 * const
+    # prompt-less layers: the constant training-marginal fallback
+    fb = p.predict(0, true, None)
+    assert np.isfinite(fb).all() and (fb == fb[0]).all()
+    fresh = PromptFeaturePredictor()         # unfitted: still safe
+    assert np.isfinite(fresh.predict(0, true, None)).all()
+
+
+# ----------------------------------------------------------------------------
+# Satellite: the controller's replicas/router axis
+# ----------------------------------------------------------------------------
+
+def test_controller_recommends_fleet_axis():
+    from repro.core.control import AdaptiveController
+    from repro.core.latency_model import LatencyModel
+    single = LatencyModel(0.0212, 1.79)
+    batch = BatchLatencyModel(k1=0.05, k2=0.5, k3=2e-4, k4=0.002)
+
+    def feed(ctrl, dist, lam):
+        rng = np.random.default_rng(0)
+        t = 0.0
+        for x in dist.sample(rng, 512):
+            t += rng.exponential(1.0 / lam)
+            ctrl.observe_arrival(t)
+            ctrl.observe_completion(int(max(x, 1)))
+
+    c = AdaptiveController(single, batch, max_replicas=16, min_samples=32)
+    feed(c, LN, 8.0)
+    rec = c.recommendation()
+    assert rec.replicas > 1
+    assert rec.router == "least_work"          # heavy tail: length-aware
+    assert rec.router in ROUTERS
+    assert rec.predictor is not None           # actionable with estimator
+    assert rec.replicas == recommend_replicas(
+        rec.lam_hat, c.empirical_dist().clip(rec.n_max), batch)
+    # light traffic / default construction keep the legacy single server
+    c1 = AdaptiveController(single, batch, min_samples=32)
+    feed(c1, UNI, 0.01)
+    rec1 = c1.recommendation()
+    assert rec1.replicas == 1 and rec1.router is None
