@@ -90,7 +90,9 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     additionally runs end-to-end behind SRPT membership (the most
     prediction-sensitive discipline) on both the fast simulator and the
     scheduler adapter, and every registered router runs a small fleet
-    end-to-end on both the fast fleet simulator and ``FleetScheduler``."""
+    end-to-end on both the fast fleet simulator and ``FleetScheduler``.
+    Every registered fault model (docs/faults.md) runs the fault-injected
+    fleet on both layers with closed accounting."""
     from repro.core.distributions import UniformTokens
     from repro.core.fastsim import simulate_fleet_fast, simulate_policy_fast
     from repro.core.fleet import ROUTERS, default_routers
@@ -117,7 +119,7 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     assert not missing_r, f"default_routers() misses registered: {missing_r}"
     docs = _load_check_docs()
     doc_errors = (docs.check_policy_docs() + docs.check_predictor_docs()
-                  + docs.check_router_docs())
+                  + docs.check_router_docs() + docs.check_fault_docs())
     assert not doc_errors, doc_errors
     out = {}
     for name, pol in policies.items():
@@ -153,6 +155,20 @@ def registry_coverage(n_req: int = 4_000) -> dict:
         assert np.isfinite(sch["mean_wait"]), (rname, "fleet scheduler")
         out[f"router:{rname}"] = {"sim": sim["mean_wait"],
                                   "sched": sch["mean_wait"]}
+    # every registered fault model runs the fault-injected fleet
+    # end-to-end on BOTH layers, and accounting must close — so a fault
+    # model that stops running (or leaks requests) fails the build
+    from repro.core.faults import default_faults, simulate_fleet_faulty
+    for fname, fault in default_faults().items():
+        for fast in (False, True):
+            res = simulate_fleet_faulty(
+                "round_robin", DynamicPolicy(b_max=8), 0.4, 2, uni, lat,
+                fault, num_requests=min(n_req, 1_000), seed=3, fast=fast)
+            assert np.isfinite(res["mean_wait"]), (fname, fast)
+            assert (res["n_served"] + res["shed"] + res["failed"]
+                    + res["unserved"] == res["n_arrived"]), (fname, fast)
+        out[f"fault:{fname}"] = {"sim": res["mean_wait"],
+                                 "served": res["n_served"]}
     return out
 
 

@@ -1,0 +1,137 @@
+"""PR 6: fault-tolerant serving — delay under failures, hedging, shedding.
+
+Three robustness questions:
+
+1. **MTBF/MTTR grid**: mean wait vs availability on the fault-injected
+   fleet (crash/repair, fast path) — the delay-vs-availability surface,
+   with the ``bulk.breakdown_wait`` envelope for context.  Lower
+   availability must cost delay; accounting must close on every cell.
+2. **Hedging under stragglers**: serving-layer fleet with slowdown
+   episodes, with and without hedged duplicate dispatch
+   (``hedge_slo``) — hedges must fire, win sometimes, and never break
+   exactly-once completion.
+3. **Shed sweep**: admission shedding probability vs served-tail
+   latency — load shedding buys tail latency with throughput, the
+   graceful-degradation tradeoff the controller's ``shed_probability``
+   recommendation walks.
+
+Recorded as the ``pr6_faults`` key of ``BENCH_simulators.json``
+(``emit_bench(..., key=...)`` — pr1..pr5 keys are never replaced).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):          # direct `python bench_....py` run
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, emit_bench, timer
+
+
+def main(quick: bool = False):
+    from repro.core.bulk import breakdown_wait
+    from repro.core.distributions import LogNormalTokens
+    from repro.core.faults import CrashRepair, Slowdown, simulate_fleet_faulty
+    from repro.core.latency_model import BatchLatencyModel
+    from repro.core.policies import DynamicPolicy, single_from_batch
+    from repro.data.pipeline import make_request_stream
+    from repro.serving.router import FleetScheduler, summarize_fleet
+    from repro.serving.scheduler import ModelClock
+
+    ln = LogNormalTokens(7.0, 0.7)
+    lat = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+    clock = ModelClock(single_from_batch(lat), lat)
+    n_req = 2_000 if quick else 5_000
+    lam, R, seed = 4.0, 3, 3
+
+    derived = {}
+    with timer() as t_all:
+        # ------ 1: MTBF/MTTR grid (crash faults, fast fleet path) ------
+        t0 = time.perf_counter()
+        grid = []
+        for mtbf, mttr in [(400.0, 5.0), (200.0, 10.0), (100.0, 15.0),
+                           (60.0, 20.0)]:
+            fault = CrashRepair(mtbf=mtbf, mttr=mttr)
+            res = simulate_fleet_faulty(
+                "least_work", DynamicPolicy(16), lam, R, ln, lat, fault,
+                num_requests=n_req, seed=seed, fast=True)
+            assert (res["n_served"] + res["shed"] + res["failed"]
+                    + res["unserved"] == res["n_arrived"])
+            env = breakdown_wait(ln, lat, lam, mtbf, mttr, R=R,
+                                 policy=DynamicPolicy(16))
+            grid.append({
+                "mtbf": mtbf, "mttr": mttr,
+                "availability": fault.capacity(),
+                "mean_wait": float(res["mean_wait"]),
+                "p99_wait": float(res["p99_wait"]),
+                "retries": int(res["retries"]),
+                "failed": int(res["failed"]),
+                "envelope_wait": env["wait"]})
+            derived[f"crash_a{fault.capacity():.3f}"] = grid[-1]["mean_wait"]
+        t_grid = time.perf_counter() - t0
+        # losing availability must cost delay across the grid extremes
+        assert grid[-1]["mean_wait"] > grid[0]["mean_wait"], grid
+        assert grid[-1]["retries"] > 0
+
+        # ------ 2: hedging win under stragglers (serving layer) ------
+        reqs = make_request_stream(min(n_req, 800), lam=8.0, dist=ln,
+                                   vocab=512, seed=seed)
+        strag = Slowdown(mtbf=40.0, duration=15.0, factor=4.0)
+        plain = FleetScheduler("random", DynamicPolicy(16), clock, R,
+                               faults=strag, seed=seed).run(reqs)
+        hedged = FleetScheduler("random", DynamicPolicy(16), clock, R,
+                                faults=strag, seed=seed,
+                                hedge_slo=0.05).run(reqs)
+        sp, sh = summarize_fleet(plain), summarize_fleet(hedged)
+        assert sh["hedged"] > 0, "hedges must fire under stragglers"
+        assert sh["served"] == len(reqs)       # exactly-once preserved
+        derived["straggler_p99_plain"] = sp["p99_wait"]
+        derived["straggler_p99_hedged"] = sh["p99_wait"]
+        derived["hedged"] = sh["hedged"]
+        derived["hedge_wins"] = sh["hedge_wins"]
+
+        # ------ 3: shed sweep (graceful degradation) ------
+        shed_rows = []
+        for p in [0.0, 0.1, 0.25, 0.5]:
+            res = FleetScheduler("jsq", DynamicPolicy(16), clock, R,
+                                 faults=CrashRepair(mtbf=80.0, mttr=10.0),
+                                 shed_prob=p, seed=seed).run(reqs)
+            s = summarize_fleet(res)
+            shed_rows.append({"shed_prob": p, "served": s["served"],
+                              "shed": s["shed"],
+                              "mean_wait": s["mean_wait_served"],
+                              "p99_wait": s["p99_wait"]})
+            derived[f"shed_p{p}"] = s["mean_wait_served"]
+        # shedding trades throughput for latency: strictly fewer served,
+        # and the heaviest shed level beats the unshedded tail
+        served_seq = [r["served"] for r in shed_rows]
+        assert served_seq[0] > served_seq[-1], served_seq
+        assert (shed_rows[-1]["mean_wait"] <= shed_rows[0]["mean_wait"]
+                * 1.05), shed_rows
+
+    emit_bench("simulators", {
+        "workload": f"lognormal(7,0.7) lam={lam} R={R} dynamic b16; "
+                    f"{n_req} requests (grid), {min(n_req, 800)} serving",
+        "crash_grid": grid,
+        "straggler_hedging": {
+            "plain": {k: sp[k] for k in ("mean_wait", "p95_wait",
+                                         "p99_wait")},
+            "hedged": {k: sh[k] for k in ("mean_wait", "p95_wait",
+                                          "p99_wait")},
+            "hedged_count": sh["hedged"], "hedge_wins": sh["hedge_wins"],
+            "availability": sh["availability"]},
+        "shed_sweep": shed_rows,
+        "grid_s": t_grid,
+    }, key="pr6_faults")
+    emit("fault_tolerance", t_all.seconds, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("REPRO_BENCH_QUICK", "0") == "1")

@@ -113,6 +113,30 @@ def main(quick: bool = False):
         # noise erodes the routing win at the heavy-tail operating point
         assert noise_w[-1] > noise_w[0]
 
+        # ------ 4: serving-layer tail observability ------
+        # the full summarize_fleet surface (p50/p95/p99 + resilience
+        # accounting) on a fault-injected serving fleet, so the tracked
+        # record carries tail latency and retry/shed/availability fields
+        from repro.core.faults import CrashRepair
+        from repro.core.policies import DynamicPolicy as _Dyn
+        from repro.data.pipeline import make_request_stream
+        from repro.serving.router import FleetScheduler, summarize_fleet
+        from repro.serving.scheduler import ModelClock
+        clock = ModelClock(single, lat)
+        sreqs = make_request_stream(800, lam=0.4, dist=uni, vocab=512,
+                                    seed=seed)
+        tail = summarize_fleet(FleetScheduler(
+            "jsq", _Dyn(b_max=8), clock, 2,
+            faults=CrashRepair(mtbf=120.0, mttr=10.0), seed=seed).run(
+            sreqs))
+        serving_tail = {k: tail[k] for k in (
+            "p50_wait", "p95_wait", "p99_wait", "mean_wait", "served",
+            "shed", "failed", "retries", "hedged", "hedge_wins",
+            "kill_events", "availability")}
+        assert tail["served"] + tail["shed"] + tail["failed"] == len(sreqs)
+        derived["serving_p99_wait"] = tail["p99_wait"]
+        derived["serving_retries"] = tail["retries"]
+
     emit_bench("simulators", {
         "workload": f"scaling: uniform(0,1000) lam={lam_tot} over R={R_grid}"
                     f"; routers: lognormal(7,0.7) heavy tail lam={lam_ht} "
@@ -125,6 +149,7 @@ def main(quick: bool = False):
         "router_mean_wait_ht": {k: float(v) for k, v in comp.items()},
         "least_work_noise": {"sigmas": sigmas,
                              "mean_wait": [float(v) for v in noise_w]},
+        "serving_tail": serving_tail,
         "sweep_s": t_sweep,
     }, key="pr5_fleet")
     emit("fleet_routing", t_all.seconds, derived)

@@ -3,9 +3,31 @@
 
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _retry(step, quick: bool, attempts: int = 3, backoff: float = 2.0):
+    """Run one bench step; in quick (CI) mode, retry transient failures
+    with exponential backoff — shared-runner flakiness (timer jitter
+    tripping a perf assertion, OOM from a neighbour) should not fail the
+    whole suite.  Full local runs keep fail-fast semantics so a real
+    regression is never masked by a retry."""
+    if not quick:
+        return step()
+    for attempt in range(attempts):
+        try:
+            return step()
+        except Exception as e:          # pragma: no cover - flake path
+            if attempt + 1 == attempts:
+                raise
+            wait = backoff * (2.0 ** attempt)
+            print(f"bench step {getattr(step, '__name__', step)!r} failed "
+                  f"({type(e).__name__}: {e}); retry {attempt + 1}/"
+                  f"{attempts - 1} in {wait:.0f}s", file=sys.stderr)
+            time.sleep(wait)
 
 
 def main() -> None:
@@ -13,18 +35,23 @@ def main() -> None:
     from benchmarks import (
         bench_latency_model, bench_batch_scaling, bench_order_stats,
         bench_clipping, bench_batching_policies, bench_fixed_batching,
-        bench_predictors, bench_fleet, bench_engine_e2e)
+        bench_predictors, bench_fleet, bench_faults, bench_engine_e2e)
 
     print("name,us_per_call,derived")
-    bench_latency_model.main(quick)       # Table I + Fig 2a
-    bench_batch_scaling.main(quick)       # Fig 2b
-    bench_order_stats.main(quick)         # Fig 3
-    bench_clipping.main(quick)            # Fig 4
-    bench_batching_policies.main(quick)   # Fig 5
-    bench_fixed_batching.main(quick)      # Fig 6
-    bench_predictors.main(quick)          # prediction-noise robustness
-    bench_fleet.main(quick)               # fleet routing across replicas
-    bench_engine_e2e.main(quick)          # beyond-paper engine E2E
+    steps = [
+        bench_latency_model.main,       # Table I + Fig 2a
+        bench_batch_scaling.main,       # Fig 2b
+        bench_order_stats.main,         # Fig 3
+        bench_clipping.main,            # Fig 4
+        bench_batching_policies.main,   # Fig 5
+        bench_fixed_batching.main,      # Fig 6
+        bench_predictors.main,          # prediction-noise robustness
+        bench_fleet.main,               # fleet routing across replicas
+        bench_faults.main,              # fault tolerance / degradation
+        bench_engine_e2e.main,          # beyond-paper engine E2E
+    ]
+    for step in steps:
+        _retry(lambda s=step: s(quick), quick)
 
     # roofline table (deliverable g) from the dry-run artifacts, if present
     try:

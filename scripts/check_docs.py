@@ -14,6 +14,9 @@
    ``registry_coverage``.
 4. Router coverage: every fleet router registered in ``repro.core.fleet``
    must be mentioned in docs/fleet.md (backtick-quoted registry name).
+5. Fault coverage: every fault model in ``repro.core.faults``
+   (``default_faults()``, i.e. the registry plus the null model) must be
+   mentioned in docs/faults.md (backtick-quoted registry name).
 
 Run from the repo root: ``PYTHONPATH=src python scripts/check_docs.py``.
 """
@@ -96,15 +99,23 @@ def check_router_docs() -> list:
                                 "router")
 
 
+def check_fault_docs() -> list:
+    _src_on_path()
+    from repro.core.faults import default_faults
+    return _check_registry_docs(default_faults(),
+                                os.path.join("docs", "faults.md"),
+                                "fault model")
+
+
 def main() -> int:
     errors = (check_links() + check_policy_docs() + check_predictor_docs()
-              + check_router_docs())
+              + check_router_docs() + check_fault_docs())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         files = len(doc_files())
         print(f"check_docs: OK ({files} files, links + "
-              f"policy/predictor/router coverage)")
+              f"policy/predictor/router/fault coverage)")
     return 1 if errors else 0
 
 

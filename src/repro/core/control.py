@@ -66,6 +66,9 @@ class Recommendation:
     replicas: int = 1                   # fleet size (repro.core.fleet)
     router: Optional[str] = None        # fleet router registry name, when
     #                                     replicas > 1
+    availability: float = 1.0           # learned replica availability
+    shed_prob: float = 0.0              # admission drop prob. keeping the
+    #                                     surviving fleet under target util
 
 
 def tail_index(dist: TokenDistribution) -> float:
@@ -104,6 +107,7 @@ class AdaptiveController:
         self.replica_target_util = float(replica_target_util)
         self._tokens = deque(maxlen=window)
         self._arrivals = deque(maxlen=window)
+        self._episodes = deque(maxlen=window)   # (up_seconds, down_seconds)
         self._last: Optional[Recommendation] = None
 
     # ---------------- stream ingestion ----------------
@@ -112,6 +116,36 @@ class AdaptiveController:
 
     def observe_completion(self, output_tokens: int):
         self._tokens.append(int(output_tokens))
+
+    def observe_episode(self, up_seconds: float, down_seconds: float):
+        """One replica failure/repair renewal cycle: ``up_seconds`` of
+        service followed by ``down_seconds`` of repair (the serving layer
+        reports each :class:`~repro.serving.resilience.ResilienceReport`
+        kill event this way; a scale-down drain is a planned episode)."""
+        self._episodes.append((float(up_seconds), float(down_seconds)))
+
+    def availability_hat(self) -> float:
+        """Empirical availability MTBF/(MTBF+MTTR); 1.0 before any
+        observed failure (the fault-free prior)."""
+        if not self._episodes:
+            return 1.0
+        up = sum(u for u, _ in self._episodes)
+        down = sum(d for _, d in self._episodes)
+        return up / max(up + down, 1e-12)
+
+    def shed_probability(self, lam: float, dist) -> float:
+        """Admission drop probability keeping the AVAILABLE fleet under
+        ``replica_target_util``: per-request marginal work is the elastic
+        envelope slope alpha = k1 + k3*E[N] (the same capacity law as
+        ``fleet.recommend_replicas``), each of the ``max_replicas``
+        replicas contributes ``availability_hat()`` of a server, so shed
+        p = max(0, 1 - a*R*target/(lam*alpha))."""
+        if lam <= 0 or dist is None:
+            return 0.0
+        alpha = self.batch_lat.k1 + self.batch_lat.k3 * dist.mean()
+        cap = (self.availability_hat() * self.max_replicas
+               * self.replica_target_util)
+        return float(max(0.0, 1.0 - cap / max(lam * alpha, 1e-12)))
 
     def lam_hat(self) -> float:
         if len(self._arrivals) < 2:
@@ -162,10 +196,14 @@ class AdaptiveController:
         # length-aware dispatch (predicted-work balancing), a light tail
         # only needs burst balancing
         replicas, router = 1, None
+        avail = self.availability_hat()
         if self.max_replicas > 1:
             from repro.core.fleet import ROUTERS, recommend_replicas
+            # availability-discounted effective-lambda transfer
+            # (repro.core.faults.effective_lambda): a replica that is up a
+            # fraction `avail` of the time sizes like load lam/avail
             replicas = recommend_replicas(
-                lam, clipped, self.batch_lat,
+                lam / max(avail, 1e-12), clipped, self.batch_lat,
                 target_util=self.replica_target_util,
                 max_replicas=self.max_replicas)
             if replicas > 1:
@@ -175,6 +213,8 @@ class AdaptiveController:
         rec = Recommendation(
             n_max=n_max, b_max=b_max, policy=policy, heavy_tailed=heavy,
             lam_hat=lam, replicas=replicas, router=router,
+            availability=avail,
+            shed_prob=self.shed_probability(lam, clipped),
             details={"scv": scv, "objective": ch.objective,
                      "expected_wait": ch.wait, "loss_frac": ch.loss_frac},
             # multibin and least_work route on predicted length: name the

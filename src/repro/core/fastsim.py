@@ -104,7 +104,7 @@ def kernel(name: str):
 def simulate_policy_fast(policy: BatchPolicy, lam: float,
                          dist: Optional[TokenDistribution], lat,
                          num_requests: int = 200_000, seed: int = 0,
-                         workload=None) -> dict:
+                         workload=None, fault_trace=None) -> dict:
     """Fast twin of :func:`repro.core.simulate.simulate_policy`: dispatch to
     the policy's compiled kernel, or fall back to the oracle when the
     policy has none (``fast_kernel=None``).
@@ -113,13 +113,27 @@ def simulate_policy_fast(policy: BatchPolicy, lam: float,
     oracle twin's parameter — the fleet layer routes one stream and runs
     each replica's sub-workload through the unchanged kernels.  Kernels
     pad provided workloads to power-of-two lengths (sliced off the
-    outputs) so replica sub-streams of nearby sizes share one compile."""
+    outputs) so replica sub-streams of nearby sizes share one compile.
+
+    ``fault_trace`` injects failure epochs exactly like the oracle twin:
+    the transform arithmetic is the SAME host-side code
+    (``simulate._with_fault_trace``), only the inner fault-free run is
+    the compiled kernel — so oracle and fastsim see bit-identical
+    epochs and trajectory-equal faulty waits."""
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         lat = single_from_batch(lat)
     if policy.fast_kernel is None:
         return simulate_policy(policy, lam, dist, lat,
                                num_requests=num_requests, seed=seed,
-                               workload=workload)
+                               workload=workload, fault_trace=fault_trace)
+    if fault_trace is not None and not fault_trace.empty:
+        from repro.core.simulate import _with_fault_trace
+        wl = workload if workload is not None else \
+            policy.sample_workload(lam, dist, num_requests, seed)
+        return _with_fault_trace(
+            lambda op_wl: KERNELS[policy.fast_kernel](
+                policy, lam, dist, lat, num_requests, seed, workload=op_wl),
+            wl, fault_trace)
     return KERNELS[policy.fast_kernel](policy, lam, dist, lat,
                                        num_requests, seed, workload=workload)
 
@@ -859,6 +873,47 @@ def backlog_route(arrivals, work, R: int) -> np.ndarray:
         rs = _backlog_scan(int(R))(
             jnp.asarray(_pad_pow2_1d(arrivals, np.inf), jnp.float64),
             jnp.asarray(_pad_pow2_1d(work, 0.0), jnp.float64))
+        return np.asarray(rs, np.int64)[:n]
+
+
+@functools.lru_cache(maxsize=None)
+def _masked_backlog_scan(R: int):
+    """Availability-masked twin of :func:`_backlog_scan`: the replica
+    up/down mask rides the scan inputs (one boolean row per arrival,
+    failure epochs precomputed on host by :mod:`repro.core.faults`), and
+    a down replica's virtual backlog is +inf in the argmin so it never
+    receives work.  With every replica up, ``where(up, v, inf) == v``
+    and the assignments are bit-equal to the unmasked scan."""
+
+    def run(arrivals, work, up):
+        def step(carry, xs):
+            v, t_prev = carry
+            a, w, u = xs
+            v = jnp.maximum(0.0, v - (a - t_prev))
+            r = jnp.argmin(jnp.where(u, v, jnp.inf)).astype(jnp.int32)
+            return (v.at[r].add(w), a), r
+
+        _, rs = lax.scan(step, (jnp.zeros(R, jnp.float64), jnp.float64(0.0)),
+                         (arrivals, work, up), unroll=_UNROLL)
+        return rs
+
+    return jax.jit(run)
+
+
+def masked_backlog_route(arrivals, work, up, R: int) -> np.ndarray:
+    """Compiled twin of ``fleet._masked_backlog_assign_np``: replica id
+    per request under an availability mask (padded rows are all-up, so
+    padding is inert)."""
+    n = len(arrivals)
+    up = np.asarray(up, bool)
+    m = len(_pad_pow2_1d(np.zeros(n), 0.0))
+    up_pad = np.ones((m, up.shape[1]), bool)
+    up_pad[:n] = up
+    with jax.experimental.enable_x64():
+        rs = _masked_backlog_scan(int(R))(
+            jnp.asarray(_pad_pow2_1d(arrivals, np.inf), jnp.float64),
+            jnp.asarray(_pad_pow2_1d(work, 0.0), jnp.float64),
+            jnp.asarray(up_pad))
         return np.asarray(rs, np.int64)[:n]
 
 

@@ -288,6 +288,26 @@ def _backlog_assign_np(arrivals: np.ndarray, work: np.ndarray,
     return out
 
 
+def _masked_backlog_assign_np(arrivals: np.ndarray, work: np.ndarray,
+                              R: int, up: np.ndarray) -> np.ndarray:
+    """Availability-masked reference backlog recursion
+    (:mod:`repro.core.faults`): a replica that is down at an arrival
+    instant (``up[i, r]`` False) has its virtual backlog masked to +inf
+    in the argmin, so it receives no work until it recovers.  With every
+    replica up this is bit-equal to :func:`_backlog_assign_np`; the
+    jitted twin is ``fastsim.masked_backlog_route``."""
+    v = np.zeros(R)
+    t_prev = 0.0
+    out = np.empty(len(arrivals), np.int64)
+    for i, (a, w) in enumerate(zip(arrivals, work)):
+        v = np.maximum(0.0, v - (a - t_prev))
+        t_prev = a
+        r = int(np.argmin(np.where(up[i], v, np.inf)))
+        v[r] += w
+        out[i] = r
+    return out
+
+
 class _BacklogRouter(RoutingPolicy):
     """Shared base for the state-dependent routers (jsq / least_work)."""
 
@@ -421,7 +441,9 @@ def _aggregate(per: List[Optional[dict]], fw: FleetWorkload) -> dict:
         np.zeros(0)
     out = {
         "mean_wait": float(waits.mean()) if waits.size else 0.0,
+        "p50_wait": float(np.percentile(waits, 50)) if waits.size else 0.0,
         "p95_wait": float(np.percentile(waits, 95)) if waits.size else 0.0,
+        "p99_wait": float(np.percentile(waits, 99)) if waits.size else 0.0,
         "per_replica": per,
         "replica_counts": fw.counts,
         "replica_of": fw.replica_of,

@@ -33,6 +33,7 @@ call order and are pinned trajectory-equal to these loops by
 
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Dict, Optional
 
 import numpy as np
@@ -44,7 +45,29 @@ from repro.core.policies import (
     FixedPolicy, Workload, policy_from_spec)
 
 
+# Warmup trimming is host-side in every oracle AND every fastsim kernel
+# (both call the one ``_warm`` below), so one stack-scoped switch disables
+# it for callers that need per-request waits aligned to the full workload —
+# the fault-injection driver (:mod:`repro.core.faults`) re-runs replicas on
+# growing retry multisets and must map waits back to individual requests.
+_WARMUP_ENABLED = [True]
+
+
+@contextlib.contextmanager
+def no_warmup():
+    """Inside this context every oracle/kernel returns FULL per-request
+    waits (no 10% warmup trim); summary stats then cover the full stream.
+    Used by :mod:`repro.core.faults` for request-level bookkeeping."""
+    _WARMUP_ENABLED.append(False)
+    try:
+        yield
+    finally:
+        _WARMUP_ENABLED.pop()
+
+
 def _warm(arr, frac=0.1):
+    if not _WARMUP_ENABLED[-1]:
+        return np.asarray(arr)
     k = int(len(arr) * frac)
     return np.asarray(arr[k:])
 
@@ -62,7 +85,8 @@ def oracle(kind: str):
 def simulate_policy(policy: BatchPolicy, lam: float,
                     dist: Optional[TokenDistribution], lat,
                     num_requests: int = 200_000, seed: int = 0,
-                    workload: Optional[Workload] = None) -> dict:
+                    workload: Optional[Workload] = None,
+                    fault_trace=None) -> dict:
     """Run ``policy`` through its reference event loop.  ``lat`` is the
     policy's latency law (``LatencyModel`` for single-service policies,
     ``BatchLatencyModel`` otherwise — a batch law handed to a
@@ -71,13 +95,53 @@ def simulate_policy(policy: BatchPolicy, lam: float,
     ``workload`` overrides the policy's own sampling (``lam``,
     ``num_requests`` and ``seed`` are then ignored) — the fleet layer
     (:mod:`repro.core.fleet`) uses this to run a routed sub-stream through
-    the unchanged single-server event loops."""
+    the unchanged single-server event loops.
+
+    ``fault_trace`` (a :class:`repro.core.faults.ReplicaTrace`) injects
+    failure epochs into the event loop via the operational-time
+    transform: arrivals are mapped onto the server's cumulative-capacity
+    clock, the UNCHANGED loop runs in operational time (formation timers
+    freeze while the server is down), and service starts are mapped back
+    to wall-clock — exactly a work-conserving queue on a breaking server
+    (preemptive-resume).  Crash-mode work loss is layered on top by
+    :func:`repro.core.faults.simulate_fleet_faulty`."""
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         from repro.core.policies import single_from_batch
         lat = single_from_batch(lat)
     wl = workload if workload is not None else \
         policy.sample_workload(lam, dist, num_requests, seed)
+    if fault_trace is not None and not fault_trace.empty:
+        return _with_fault_trace(
+            lambda op_wl: ORACLES[policy.oracle_kind](policy, op_wl, lat,
+                                                      dist),
+            wl, fault_trace)
     return ORACLES[policy.oracle_kind](policy, wl, lat, dist)
+
+
+def _with_fault_trace(run, wl: Workload, trace) -> dict:
+    """Shared breakdown wrapper (oracle AND fast layers): run the
+    fault-free simulator on the operational-time workload, then map the
+    service starts back through the trace's inverse transform.  Works
+    with or without warmup trimming (trimmed waits align to the stream
+    tail)."""
+    op_arr = trace.op_time(wl.arrivals)
+    op_wl = Workload(arrivals=op_arr, tokens=wl.tokens,
+                     inter=np.diff(op_arr, prepend=0.0),
+                     predicted=wl.predicted)
+    res = run(op_wl)
+    op_waits = np.asarray(res["waits"], np.float64)
+    off = len(wl.arrivals) - len(op_waits)          # warmup offset
+    start_wall = trace.wall_time(op_arr[off:] + op_waits)
+    waits = start_wall - np.asarray(wl.arrivals)[off:]
+    out = dict(res)
+    out.update({
+        "waits": waits,
+        "mean_wait": float(waits.mean()) if waits.size else 0.0,
+        "p95_wait": float(np.percentile(waits, 95)) if waits.size else 0.0,
+    })
+    if "mean_wait_served" in res:
+        out["mean_wait_served"] = out["mean_wait"]
+    return out
 
 
 # ----------------------------------------------------------------------------

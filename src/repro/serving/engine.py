@@ -68,19 +68,43 @@ def _bucket(n: int, lo: int, hi: int) -> int:
     return min(b, hi)
 
 
+def _guard_logits(logits):
+    """Per-slot non-finite guard: ``bad[b]`` is True when the slot's
+    logits contain NaN/inf (one poisoned request), ``safe`` replaces
+    non-finite entries with -inf so argmax/categorical stay defined.
+    Finite logits pass through bit-identical."""
+    finite = jnp.isfinite(logits)
+    bad = ~jnp.all(finite, axis=-1)
+    return jnp.where(finite, logits, -jnp.inf), bad
+
+
+def _guarded_argmax(logits):
+    """Greedy decode over guarded logits; returns (tokens, bad mask)."""
+    safe, bad = _guard_logits(logits)
+    return jnp.argmax(safe, axis=-1).astype(jnp.int32), bad
+
+
 def _sample_tokens(keys, logits, temperature: float, top_k: Optional[int]):
     """Temperature / top-k sampling over [b, vocab] logits with one PRNG
     key PER SLOT (``keys``: [b, 2]); temperature is a trace-time constant
     and temperature=0 callers use argmax instead.  Sampling per slot from
     its own key — rather than one batch-wide key the categorical splits
     internally by row — is what makes sampled streams independent of the
-    batch bucket a request happens to occupy."""
+    batch bucket a request happens to occupy.
+
+    Slots with non-finite logits fall back to greedy over the guarded
+    logits (the categorical is undefined there) and are reported in the
+    returned ``bad`` mask; finite slots sample bit-identically to the
+    unguarded path.  Returns (tokens, bad)."""
+    safe, bad = _guard_logits(logits)
+    greedy = jnp.argmax(safe, axis=-1).astype(jnp.int32)
     if top_k is not None:
-        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    return jax.vmap(
+        kth = jax.lax.top_k(safe, top_k)[0][..., -1:]
+        safe = jnp.where(safe < kth, -jnp.inf, safe)
+    sampled = jax.vmap(
         lambda k, l: jax.random.categorical(k, l / temperature, axis=-1)
-    )(keys, logits).astype(jnp.int32)
+    )(keys, safe).astype(jnp.int32)
+    return jnp.where(bad, greedy, sampled), bad
 
 
 def _split_slot_keys(keys):
@@ -104,6 +128,7 @@ class Engine:
         self._chunk_fns: Dict[tuple, callable] = {}
         self.step_log: List[dict] = []    # (kind, batch, seq, seconds[, steps])
         self.host_syncs = 0               # device->host blocking round-trips
+        self.sample_fallbacks = 0         # non-finite-logit greedy fallbacks
         self._sample_key = jax.random.PRNGKey(seed)   # decode sampling stream
 
     # ------------------------------------------------------------------
@@ -170,21 +195,25 @@ class Engine:
                         cache = stack_group_cache(cache, cfg.num_groups)
                     if temperature > 0.0:
                         keys, subs = _split_slot_keys(keys)
-                        nxt = _sample_tokens(subs, logits, temperature, top_k)
+                        nxt, bad = _sample_tokens(subs, logits, temperature,
+                                                  top_k)
                     else:
-                        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                        nxt, bad = _guarded_argmax(logits)
                     active = produced < targets
                     produced = produced + active.astype(produced.dtype)
                     step = (jnp.ones_like(kv_lens) if advance_all
                             else active.astype(kv_lens.dtype))
                     kv_lens = jnp.minimum(kv_lens + step, max_seq - 1)
-                    return (cache, nxt, kv_lens, produced, keys), (nxt, active)
+                    nbad = jnp.sum((bad & active).astype(jnp.int32))
+                    return (cache, nxt, kv_lens, produced, keys), \
+                        (nxt, active, nbad)
 
-                carry, (toks, actives) = lax.scan(
+                carry, (toks, actives, nbads) = lax.scan(
                     body, (cache, tok, kv_lens, produced, keys), None,
                     length=steps)
                 cache, tok, kv_lens, produced, keys = carry
-                return cache, tok, kv_lens, produced, keys, toks, actives
+                return (cache, tok, kv_lens, produced, keys, toks, actives,
+                        jnp.sum(nbads))
 
             self._chunk_fns[key] = jax.jit(fn, donate_argnums=(1,))
         return self._chunk_fns[key]
@@ -233,7 +262,8 @@ class Engine:
         self.step_log.append(
             {"kind": "decode", "batch": b, "seq": int(jnp.max(kv_lens)),
              "seconds": dt})
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt, bad = _guarded_argmax(logits)
+        self.sample_fallbacks += int(jnp.sum(bad))
         return nxt, cache, dt
 
     def decode_chunk(self, cache, kv_lens, tokens, produced, targets,
@@ -263,12 +293,13 @@ class Engine:
                 slot_keys = jnp.zeros((b, 2), jnp.uint32)
         fn = self._get_decode_chunk(b, steps, temperature, top_k)
         t0 = time.perf_counter()
-        cache, tok, kv_lens, produced, slot_keys, toks, actives = fn(
+        cache, tok, kv_lens, produced, slot_keys, toks, actives, nbad = fn(
             self.params, cache, tokens, kv_lens, produced, targets,
             slot_keys)
         tok = jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
         self.host_syncs += 1
+        self.sample_fallbacks += int(nbad)
         self.step_log.append(
             {"kind": "decode_chunk", "batch": b, "steps": steps,
              "seq": int(jnp.max(kv_lens)), "seconds": dt})
@@ -333,9 +364,10 @@ class Engine:
             slot_keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
                 jnp.arange(b))
             slot_keys, subs = _split_slot_keys(slot_keys)
-            tok = _sample_tokens(subs, last, temperature, top_k)
+            tok, bad0 = _sample_tokens(subs, last, temperature, top_k)
         else:
-            tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            tok, bad0 = _guarded_argmax(last)
+        self.sample_fallbacks += int(jnp.sum(bad0[:nreq]))
         live = np.arange(nreq)
         produced = np.ones(nreq, np.int64)    # first token from prefill
         done_at = np.full(nreq, np.nan)

@@ -25,4 +25,15 @@ def summarize(result, warmup_frac: float = 0.1) -> dict:
         "requests": int(len(waits)),
         "makespan": float(result.makespan),
     }
+    rep = getattr(result, "resilience", None)
+    if rep is not None:
+        # fault accounting (repro.serving.resilience.ResilienceReport):
+        # conservation served + shed + failed == arrived
+        out.update({
+            "served": int(rep.served), "shed": int(rep.shed),
+            "failed": int(rep.failed), "retries": int(rep.retries),
+            "hedged": int(rep.hedged), "hedge_wins": int(rep.hedge_wins),
+            "kill_events": len(rep.kill_events),
+            "availability": [float(a) for a in rep.availability],
+        })
     return out

@@ -125,7 +125,8 @@ class FleetScheduler:
     :class:`~repro.serving.scheduler.PolicyScheduler`'s parameter."""
 
     def __init__(self, router, policy: BatchPolicy, clock: ModelClock,
-                 R: int, predictor=None, predict_seed: int = 0):
+                 R: int, predictor=None, predict_seed: int = 0,
+                 faults=None, **fault_kw):
         assert R >= 1
         self.router = router_from_spec(router)
         self.policy = policy
@@ -133,9 +134,21 @@ class FleetScheduler:
         self.R = int(R)
         self.predictor = predictor
         self.predict_seed = predict_seed
+        # resilience path (repro.serving.resilience): a fault model/spec
+        # or any of its knobs (kill_at / shed_prob / hedge_slo / ...)
+        # reroutes run() through the fault-aware twin; None + no knobs
+        # keeps the PR 5 body verbatim.
+        self.faults = faults
+        self.fault_kw = fault_kw
 
     def run(self, reqs: List[Request]) -> FleetScheduleResult:
         pol = self.policy
+        if self.faults is not None or self.fault_kw:
+            from repro.serving.resilience import ResilientFleetScheduler
+            return ResilientFleetScheduler(
+                self.router, pol, self.clock, self.R,
+                predictor=self.predictor, predict_seed=self.predict_seed,
+                faults=self.faults, **self.fault_kw).run(reqs)
 
         def runner(r, sub, predicted):
             if isinstance(pol, ContinuousPolicy):
@@ -155,8 +168,8 @@ class FleetScheduler:
 def run_fleet_schedule(router, policy: BatchPolicy,
                        engines, reqs: List[Request],
                        R: Optional[int] = None, lat=None,
-                       predictor=None, predict_seed: int = 0
-                       ) -> FleetScheduleResult:
+                       predictor=None, predict_seed: int = 0,
+                       faults=None, **fault_kw) -> FleetScheduleResult:
     """Execute a routed fleet on the REAL engine layer: form each
     replica's batches on the virtual arrival timeline and run them through
     :func:`~repro.serving.scheduler.run_engine_schedule` (prefill + fused
@@ -167,7 +180,19 @@ def run_fleet_schedule(router, policy: BatchPolicy,
     are virtual, so batches are simply replica-tagged work on the same
     hardware).  ``lat`` (a ``BatchLatencyModel``/``LatencyModel``)
     calibrates the router's work units in seconds; without it the backlog
-    routers fall back to raw predicted tokens as the work unit."""
+    routers fall back to raw predicted tokens as the work unit.
+
+    ``faults`` (a :mod:`repro.core.faults` model/name/spec) or any
+    resilience knob (``kill_at``, ``shed_prob``, ``hedge_slo``, ...)
+    reroutes through
+    :func:`repro.serving.resilience.run_resilient_engine_fleet`;
+    omitted, the PR 5 body runs verbatim."""
+    if faults is not None or fault_kw:
+        from repro.serving.resilience import run_resilient_engine_fleet
+        return run_resilient_engine_fleet(
+            router, policy, engines, reqs, R=R, lat=lat,
+            predictor=predictor, predict_seed=predict_seed,
+            faults=faults, **fault_kw)
     if isinstance(engines, (list, tuple)):
         engine_of = list(engines)
         if R is None:
@@ -191,8 +216,9 @@ def summarize_fleet(result: FleetScheduleResult,
     """Aggregate serving metrics plus the per-replica breakdown and the
     load split (requests per replica)."""
     out = summarize(result, warmup_frac=warmup_frac)
+    rep = result.replica_of
     out["replica_requests"] = np.bincount(
-        result.replica_of, minlength=len(result.per_replica)).tolist()
+        rep[rep >= 0], minlength=len(result.per_replica)).tolist()
     out["per_replica"] = [
         None if res is None else summarize(res, warmup_frac=warmup_frac)
         for res in result.per_replica]
