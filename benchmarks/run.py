@@ -35,7 +35,8 @@ def main() -> None:
     from benchmarks import (
         bench_latency_model, bench_batch_scaling, bench_order_stats,
         bench_clipping, bench_batching_policies, bench_fixed_batching,
-        bench_predictors, bench_fleet, bench_faults, bench_engine_e2e)
+        bench_predictors, bench_fleet, bench_faults, bench_engine_e2e,
+        bench_scale)
 
     print("name,us_per_call,derived")
     steps = [
@@ -49,6 +50,7 @@ def main() -> None:
         bench_fleet.main,               # fleet routing across replicas
         bench_faults.main,              # fault tolerance / degradation
         bench_engine_e2e.main,          # beyond-paper engine E2E
+        bench_scale.main,               # sharded sweeps + fused serving
     ]
     for step in steps:
         _retry(lambda s=step: s(quick), quick)

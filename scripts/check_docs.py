@@ -17,6 +17,10 @@
 5. Fault coverage: every fault model in ``repro.core.faults``
    (``default_faults()``, i.e. the registry plus the null model) must be
    mentioned in docs/faults.md (backtick-quoted registry name).
+6. Performance page: docs/performance.md must exist and keep documenting
+   the PR 7 perf surface — the ``decode_attention_impl`` switch and its
+   ModelConfig default, the ``compact_impl`` switch, ``shard_map``
+   sweeps, and the ragged/dense kernel pair.
 
 Run from the repo root: ``PYTHONPATH=src python scripts/check_docs.py``.
 """
@@ -107,15 +111,34 @@ def check_fault_docs() -> list:
                                 "fault model")
 
 
+def check_performance_docs() -> list:
+    """docs/performance.md must exist and mention the tunable perf
+    surface by name, so a rename or removal cannot leave the page
+    describing switches that no longer exist."""
+    _src_on_path()
+    from repro.models.config import ModelConfig
+    path = os.path.join(ROOT, "docs", "performance.md")
+    if not os.path.exists(path):
+        return ["docs/performance.md is missing"]
+    with open(path) as f:
+        text = f.read()
+    required = ["`decode_attention_impl`", "`compact_impl`", "`shard_map`",
+                "`ragged`", "`dense`",
+                f"`{ModelConfig.decode_attention_impl}`"]
+    return [f"docs/performance.md: {tok} is not documented"
+            for tok in required if tok not in text]
+
+
 def main() -> int:
     errors = (check_links() + check_policy_docs() + check_predictor_docs()
-              + check_router_docs() + check_fault_docs())
+              + check_router_docs() + check_fault_docs()
+              + check_performance_docs())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         files = len(doc_files())
-        print(f"check_docs: OK ({files} files, links + "
-              f"policy/predictor/router/fault coverage)")
+        print(f"check_docs: OK ({files} files, links + policy/predictor/"
+              f"router/fault coverage + performance page)")
     return 1 if errors else 0
 
 

@@ -703,13 +703,19 @@ def _srpt_kernel(policy, lam, dist, lat, num_requests, seed,
 # ----------------------------------------------------------------------------
 
 def sweep(policies: dict, lam_grid, dist, lat,
-          num_requests: int = 100_000, seed: int = 0) -> dict:
+          num_requests: int = 100_000, seed: int = 0,
+          lane_scan: Optional[Callable] = None) -> dict:
     """Mean wait for each policy over an arrival-rate grid — the uniform
     fast entry point.  ``policies``: name -> BatchPolicy (or legacy spec
     dict).  Policies riding the shared per-request batching scan
     (``scan_lane() is not None``) are stacked as lanes of ONE vmapped scan;
     every other policy dispatches through ``KERNELS`` per (λ, policy) cell
-    (falling back to the oracle when it has no compiled kernel)."""
+    (falling back to the oracle when it has no compiled kernel).
+
+    ``lane_scan`` overrides the vmapped lane executor (same signature and
+    bit-identical per-lane semantics as ``_batching_scan(True)``) —
+    :mod:`repro.core.shardsweep` passes its ``shard_map`` twin to spread
+    the lanes over a device mesh."""
     lam_grid = list(lam_grid)
     insts = {name: (p if isinstance(p, BatchPolicy) else policy_from_spec(p))
              for name, p in policies.items()}
@@ -737,8 +743,9 @@ def sweep(policies: dict, lam_grid, dist, lat,
         elas = np.array([e for _, _, e, _ in lanes])
         bmax = np.array([float(bm) if bm is not None else _NO_CAP
                          for _, _, _, bm in lanes])
+        scan = _batching_scan(True) if lane_scan is None else lane_scan
         with jax.experimental.enable_x64():
-            starts, closed = _batching_scan(True)(
+            starts, closed = scan(
                 jnp.asarray(arr_l, jnp.float64),
                 jnp.asarray(tok_l, jnp.float64),
                 jnp.float64(lat.k1), jnp.float64(lat.k2),
@@ -766,7 +773,8 @@ def simulate_policy_sweep_fast(lam_grid, dist, lat, policies: dict,
 
 def sweep_noise(policy_factory: Callable[[float], BatchPolicy], lam_grid,
                 sigma_grid, dist, lat, num_requests: int = 50_000,
-                seed: int = 0) -> dict:
+                seed: int = 0,
+                srpt_loop: Optional[Callable] = None) -> dict:
     """Mean wait over the (λ, σ) grid: how a length-aware policy's win
     erodes as its predictor degrades.
 
@@ -788,6 +796,11 @@ def sweep_noise(policy_factory: Callable[[float], BatchPolicy], lam_grid,
     cost more than per-cell calls — the lane layout pays off on
     accelerator backends where lanes are data-parallel, and keeps one
     compile for arbitrarily fine σ grids.
+
+    ``srpt_loop`` overrides the vmapped lane executor factory (same
+    ``L -> callable`` contract and bit-identical per-lane semantics as
+    ``_srpt_loop_vmapped``) — :mod:`repro.core.shardsweep` passes its
+    ``shard_map`` twin to spread the (λ, σ) lanes over a device mesh.
 
     Returns ``{"mean_wait": [len(lam_grid), len(sigma_grid)], "lams",
     "sigmas"}``.
@@ -812,8 +825,9 @@ def sweep_noise(policy_factory: Callable[[float], BatchPolicy], lam_grid,
                 tok_ranks.append(tok_rank)
                 orders.append(order)
                 arrs.append(wl.arrivals)
+        loop = _srpt_loop_vmapped if srpt_loop is None else srpt_loop
         with jax.experimental.enable_x64():
-            starts, nbs = _srpt_loop_vmapped(L)(
+            starts, nbs = loop(L)(
                 jnp.asarray(np.stack(trees), jnp.float64),
                 jnp.asarray(np.stack(tok_ranks), jnp.float64),
                 jnp.int32(num_requests),

@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -69,6 +71,21 @@ FSDP_RULES: AxisRules = dict(
 # Sequence-parallel variant used for very long prefill: activations shard
 # their seq dim over `model` between attention blocks.
 SEQPAR_RULES: AxisRules = dict(DEFAULT_RULES, seq="model")
+
+# Sweep-cell sharding (repro.core.shardsweep): the stacked (λ, policy, σ,
+# replica) lanes of a grid sweep partition over a 1-D "cells" mesh; every
+# other sweep input (latency constants, shared trip counts) replicates.
+SWEEP_RULES: AxisRules = {"lanes": "cells"}
+
+
+def cells_mesh(devices=None) -> Mesh:
+    """1-D mesh over all local devices for grid-cell data parallelism —
+    the mesh ``repro.core.shardsweep`` shards sweep lanes over.  On a
+    single-device host this is a size-1 mesh (the shard_map path still
+    runs, bit-equal to the plain vmap); CI forces a 4-device CPU mesh via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``."""
+    devs = jax.devices() if devices is None else list(devices)
+    return Mesh(np.array(devs), ("cells",))
 
 
 def _resolve(logical: Optional[str], rules: AxisRules, mesh: Mesh,

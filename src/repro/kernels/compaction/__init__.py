@@ -1,0 +1,10 @@
+"""Fused elastic-bucket compaction (Pallas gather kernel).
+
+``ops.fused_compact`` gathers the live slots of every KV-cache leaf plus
+the ``kv_lens`` / token / per-slot-PRNG-key vectors into a smaller batch
+bucket in ONE jitted call, with the keep indices derived on device — the
+Pallas twin of the host-visible gather loop in ``Engine.compact``.
+"""
+
+from repro.kernels.compaction.ops import fused_compact, gather_rows  # noqa: F401
+from repro.kernels.compaction.ref import compact_reference  # noqa: F401

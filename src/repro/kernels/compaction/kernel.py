@@ -1,0 +1,53 @@
+"""Pallas TPU gather kernel for elastic bucket compaction.
+
+Elastic batching's payoff on TPU is moving the surviving requests into a
+smaller static bucket; the move itself is a batch-axis gather of every
+KV-cache leaf.  Here the gather IS the DMA: the keep indices ride scalar
+prefetch (like ``lengths`` in the ragged decode kernel), the input
+BlockSpec's index map reads ``idx[i]`` to pick the source row, and the
+kernel body is a straight VMEM copy — no host-visible indexing, no
+per-leaf eager dispatch.
+
+Layout: src [G, B, F] (leading layer-group stack, batch second — the
+cache-leaf layout from ``models.model.cache_specs`` with trailing dims
+flattened), idx [NB] int32, out [G, NB, F].  Grid (G, NB, F/block_f).
+Rows may repeat in ``idx`` (the engine pads short keep sets with slot 0),
+which a gather handles for free.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, o_ref):
+    # the index map already resolved idx[i] -> source row; just copy.
+    o_ref[...] = src_ref[...]
+
+
+def gather_rows_kernel(src, idx, *, block_f: int, interpret: bool = True):
+    """src: [G, B, F] with F % block_f == 0; idx: [NB] int32 source rows.
+
+    Returns [G, NB, F] with out[g, i] = src[g, idx[i]] (bit-identical to
+    ``src[:, idx]``)."""
+    g, b, f = src.shape
+    nb = idx.shape[0]
+    assert f % block_f == 0, (f, block_f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, nb, f // block_f),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_f),
+                         lambda gi, i, j, idx: (gi, idx[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_f),
+                               lambda gi, i, j, idx: (gi, i, j)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, nb, f), src.dtype),
+        interpret=interpret,
+    )(idx, src)

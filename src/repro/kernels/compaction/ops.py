@@ -1,0 +1,87 @@
+"""jit'd public wrappers: fused elastic-bucket compaction.
+
+``fused_compact`` is the device-resident twin of ``Engine.compact``: ONE
+jitted call that (1) derives the keep indices on device from the per-slot
+``produced``/``targets`` counters (``nonzero(size=nb, fill_value=0)``
+matches the host's zero-padded keep array bit for bit), then (2) gathers
+every cache leaf plus the ``kv_lens``/token/per-slot-PRNG-key vectors
+through the scalar-prefetch Pallas gather kernel.  Nothing crosses the
+host boundary, so compaction adds zero ``host_syncs``.
+
+Every gathered array funnels through the SAME kernel: cache leaves as
+[G, B, F] row blocks, the per-slot vectors reshaped to [1, B, F] rows.
+F is lane-padded to a multiple of 128 (TPU tiling) and sliced back — the
+pad columns never reach the output, so results stay bit-equal to
+``leaf[:, idx]``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import resolve_interpret
+from repro.kernels.compaction.kernel import gather_rows_kernel
+
+_LANE = 128        # TPU lane tile; pad the flattened row dim to a multiple
+
+
+def _gather3(src, idx, interpret: bool):
+    """[G, B, F] gather at rows ``idx`` via the Pallas kernel, handling
+    lane padding for arbitrary F."""
+    g, b, f = src.shape
+    fp = max(-(-f // _LANE) * _LANE, _LANE)
+    if fp != f:
+        src = jnp.pad(src, ((0, 0), (0, 0), (0, fp - f)))
+    block_f = 512 if fp % 512 == 0 else _LANE
+    out = gather_rows_kernel(src, idx, block_f=block_f, interpret=interpret)
+    return out[..., :f] if fp != f else out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(src, idx, *, interpret: Optional[bool] = None):
+    """Public row gather: src [G, B, ...] -> [G, NB, ...] at batch rows
+    ``idx`` [NB]; bit-equal to ``src[:, idx]``."""
+    g, b = src.shape[:2]
+    flat = src.reshape(g, b, -1)
+    out = _gather3(flat, idx.astype(jnp.int32),
+                   resolve_interpret(interpret))
+    return out.reshape((g, idx.shape[0]) + src.shape[2:])
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "interpret"))
+def fused_compact(cache, kv_lens, tokens, slot_keys, produced, targets, *,
+                  nb: int, interpret: Optional[bool] = None):
+    """Compact the live slots of a decode bucket into bucket size ``nb``.
+
+    ``produced``/``targets`` are the per-slot counters the fused decode
+    chunk already keeps on device; a slot is live iff it still owes tokens
+    (``produced < targets`` — padding slots carry 0/0 and finished slots
+    fail the test, exactly the host's ``still`` selection).  Returns
+    ``(cache, kv_lens, tokens, slot_keys, keep)`` with every array
+    gathered at the first ``nb`` live slots in slot order, zero-filled
+    past the live count — bit-equal to ``Engine.compact``.  ``slot_keys``
+    may be None (greedy decoding has no sampling streams to carry)."""
+    interp = resolve_interpret(interpret)
+    live = (targets - produced) > 0
+    keep = jnp.nonzero(live, size=nb, fill_value=0)[0].astype(jnp.int32)
+
+    def gather_leaf(leaf):
+        if leaf.ndim < 2:
+            return leaf
+        g, b = leaf.shape[0], leaf.shape[1]
+        flat = leaf.reshape(g, b, -1)
+        return _gather3(flat, keep, interp).reshape(
+            (g, nb) + leaf.shape[2:])
+
+    cache = jax.tree.map(gather_leaf, cache)
+    kv_lens = _gather3(kv_lens.reshape(1, -1, 1), keep,
+                       interp).reshape(nb)
+    tokens = _gather3(tokens.reshape(1, -1, 1), keep, interp).reshape(nb)
+    if slot_keys is not None:
+        slot_keys = _gather3(slot_keys.reshape(1, -1, 2), keep,
+                             interp).reshape(nb, 2)
+    return cache, kv_lens, tokens, slot_keys, keep

@@ -1,0 +1,18 @@
+"""Reference semantics for fused compaction: the host-driven gathers of
+``Engine.compact`` as plain jnp indexing.  The equality tests pin
+``ops.fused_compact`` bitwise against this (and against ``Engine.compact``
+itself), including the gathered per-slot PRNG keys that carry PR 4's
+sampling-invariance guarantee."""
+
+from __future__ import annotations
+
+import jax
+
+
+def compact_reference(cache, kv_lens, tokens, gidx, slot_keys=None):
+    """Gather batch axis 1 of every cache leaf (and axis 0 of the per-slot
+    vectors) at the padded keep indices ``gidx`` [NB]."""
+    cache = jax.tree.map(
+        lambda leaf: leaf[:, gidx] if leaf.ndim >= 2 else leaf, cache)
+    keys = None if slot_keys is None else slot_keys[gidx]
+    return cache, kv_lens[gidx], tokens[gidx], keys

@@ -3,10 +3,12 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_bh
 
 
@@ -14,11 +16,12 @@ from repro.kernels.flash_attention.kernel import flash_attention_bh
     "causal", "window", "block_q", "block_kv", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
                     block_q: int = 128, block_kv: int = 256,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """q: [B,S,Hq,D]; k/v: [B,S,Hkv,D] -> [B,S,Hq,D].
 
-    TPU target; interpret=True executes the kernel body on CPU for
-    validation (the container has no TPU)."""
+    TPU target; ``interpret=None`` resolves via
+    ``kernels.default_interpret`` — compiled on TPU, interpreted (the
+    kernel body as pure JAX) on CPU validation runs."""
     b, s, hq, d = q.shape
     hkv = k.shape[2]
     qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
@@ -26,5 +29,5 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
     vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
     out = flash_attention_bh(qf, kf, vf, causal=causal, window=window,
                              block_q=block_q, block_kv=block_kv,
-                             interpret=interpret)
+                             interpret=resolve_interpret(interpret))
     return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)

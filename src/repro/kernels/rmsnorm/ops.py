@@ -3,15 +3,18 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels import resolve_interpret
 from repro.kernels.rmsnorm.kernel import fused_rmsnorm_2d
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def fused_rmsnorm(x, residual, weight, *, eps: float = 1e-6,
-                  block_rows: int = 256, interpret: bool = True):
+                  block_rows: int = 256,
+                  interpret: Optional[bool] = None):
     shape = x.shape
     d = shape[-1]
     t = 1
@@ -22,5 +25,6 @@ def fused_rmsnorm(x, residual, weight, *, eps: float = 1e-6,
         block //= 2
     res, normed = fused_rmsnorm_2d(
         x.reshape(t, d), residual.reshape(t, d), weight,
-        eps=eps, block_rows=max(block, 1), interpret=interpret)
+        eps=eps, block_rows=max(block, 1),
+        interpret=resolve_interpret(interpret))
     return res.reshape(shape), normed.reshape(shape)

@@ -79,14 +79,20 @@ class ModelConfig:
     # attention dots read the cache directly, no per-layer transpose copies)
     cache_layout: str = "bshd"
     # decode attention implementation:
-    #   dense  - padded softmax over the full cache span (baseline)
+    #   auto   - ragged on TPU (the Pallas fast path is the serving
+    #            default), dense elsewhere; resolved at use time via
+    #            ``resolved_decode_attention_impl``.  On CPU the ragged
+    #            kernel is still selectable explicitly and runs in Pallas
+    #            interpret mode (kernels.default_interpret).
+    #   dense  - padded softmax over the full cache span (baseline,
+    #            always selectable)
     #   ragged - repro.kernels ragged decode kernel: per-request early exit
     #            over KV blocks, so early-finished slots stop paying padded
     #            KV compute. bshd layout only (bhsd keeps the dense path).
     #            block_kv is the largest power of two (<=128) dividing the
     #            cache span — non-power-of-two spans degrade toward
     #            block_kv=1, so keep max_seq a power of two.
-    decode_attention_impl: str = "dense"
+    decode_attention_impl: str = "auto"
 
     # vlm
     vision_seq: int = 0              # stub patch-embedding length
@@ -154,6 +160,19 @@ class ModelConfig:
     @property
     def ssm_conv_dim(self) -> int:
         return self.ssm_d_inner + 2 * self.ssm_n_groups * self.ssm_state
+
+    @property
+    def resolved_decode_attention_impl(self) -> str:
+        """``decode_attention_impl`` with ``"auto"`` resolved for the
+        current backend: the ragged Pallas decode kernel is the default on
+        TPU (benchmarked in ``benchmarks/bench_scale.py``; docs/performance.md),
+        dense everywhere else.  Explicit ``"dense"``/``"ragged"`` always
+        win — dense stays selectable on TPU and ragged runs in interpret
+        mode on CPU."""
+        if self.decode_attention_impl != "auto":
+            return self.decode_attention_impl
+        import jax
+        return "ragged" if jax.default_backend() == "tpu" else "dense"
 
     @property
     def has_attention(self) -> bool:

@@ -319,15 +319,15 @@ def attention_block(p, x, cfg: ModelConfig, ctx: ShardCtx, *,
             valid = jnp.minimum(kv_lens + 1, span)
             # ring buffer holds the most recent `valid` tokens; absolute RoPE
             # was applied before caching so slot order is irrelevant.
-            if cfg.decode_attention_impl == "ragged" and not hm:
+            if cfg.resolved_decode_attention_impl == "ragged" and not hm:
                 # per-request early exit over KV blocks (elastic batching at
-                # the kernel level): a short request only pays its own span
+                # the kernel level): a short request only pays its own span;
+                # interpret mode resolves via kernels.default_interpret
                 from repro.kernels.ragged_decode_attention.ops import (
                     ragged_decode_attention)
                 out = ragged_decode_attention(
                     q[:, 0], k_cache, v_cache, valid,
-                    block_kv=_ragged_block_kv(span),
-                    interpret=jax.default_backend() != "tpu")[:, None]
+                    block_kv=_ragged_block_kv(span))[:, None]
             else:
                 out = decode_attention(q, k_cache, v_cache, valid,
                                        window=None, ctx=ctx,

@@ -20,7 +20,13 @@ logged in ``step_log``; ``generate`` reports the syncs it spent so the
 benchmark suite can assert the accounting. Elastic bucket compaction and
 completion bookkeeping happen at chunk boundaries (per-request completion
 times are interpolated inside a chunk from the per-step active mask the scan
-emits). ``decode_batch`` (one step, one sync) is kept as the reference path
+emits). Compaction itself is device-resident by default
+(``EngineConfig.compact_impl="fused"``): one jitted call around the Pallas
+gather kernel in ``repro.kernels.compaction``, keep indices derived in-jit
+from the chunk's produced/targets carry — zero host syncs per compaction
+event. ``compact_impl="host"`` keeps the reference path (host keep indices,
+per-leaf eager gathers) and counts one host-visible event per compaction.
+``decode_batch`` (one step, one sync) is kept as the reference path
 — ``generate(..., chunk=1)`` reproduces it step for step.
 
 The engine serves two roles:
@@ -59,6 +65,13 @@ class EngineConfig:
     decode_chunk: int = 32         # decode steps fused per host sync
     temperature: float = 0.0       # 0 -> greedy argmax decoding
     top_k: Optional[int] = None    # sample from the k best logits only
+    # elastic bucket compaction implementation:
+    #   fused - one jitted call around the Pallas gather kernel
+    #           (repro.kernels.compaction); keep indices derived on device
+    #           from the chunk's produced/targets counters, zero host syncs
+    #   host  - reference path: host-resident keep indices + per-leaf eager
+    #           gathers (one host-visible event per compaction)
+    compact_impl: str = "fused"
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -308,8 +321,12 @@ class Engine:
     def compact(self, cache, kv_lens, tokens, keep_idx: np.ndarray,
                 slot_keys=None):
         """Gather live slots into a smaller bucket (elastic batching's real
-        speedup on TPU).  ``slot_keys`` are gathered alongside so each
-        surviving request keeps its own sampling stream."""
+        speedup on TPU) — HOST reference path: the keep indices live on
+        host and each cache leaf's gather is dispatched eagerly, so every
+        compaction is one host-visible event (counted in ``host_syncs``
+        and ``step_log``).  ``compact_fused`` is the device-resident twin
+        the engine runs by default.  ``slot_keys`` are gathered alongside
+        so each surviving request keeps its own sampling stream."""
         nb = _bucket(len(keep_idx), self.ecfg.min_bucket, self.ecfg.max_batch)
         idx = np.zeros((nb,), np.int32)
         idx[:len(keep_idx)] = keep_idx
@@ -317,8 +334,32 @@ class Engine:
         cache = jax.tree.map(
             lambda leaf: leaf[:, gidx] if leaf.ndim >= 2 else leaf, cache)
         keys = None if slot_keys is None else slot_keys[gidx]
+        self.host_syncs += 1
+        self.step_log.append(
+            {"kind": "compact", "impl": "host", "batch": nb, "syncs": 1})
         return (cache, kv_lens[gidx], tokens[gidx], nb,
                 int(len(keep_idx)), keys)
+
+    def compact_fused(self, cache, kv_lens, tokens, produced, targets,
+                      n_live: int, slot_keys=None):
+        """Device-resident compaction (``EngineConfig.compact_impl=
+        "fused"``): ONE jitted call around the scalar-prefetch Pallas
+        gather kernel (:mod:`repro.kernels.compaction`).  The keep indices
+        are derived ON DEVICE from the chunk's ``produced``/``targets``
+        carry (live iff ``produced < targets`` — bit-identical to the host
+        path's ``still`` selection), so nothing crosses the host boundary
+        and ``host_syncs`` per compaction event is zero.  Only the bucket
+        size ``nb`` is a host decision (static shapes), made from counts
+        the chunk-boundary sync already paid for.  Bit-equal to
+        :meth:`compact` — including the gathered per-slot PRNG keys, so
+        sampled streams stay invariant to compaction (PR 4 guarantee)."""
+        from repro.kernels.compaction import fused_compact
+        nb = _bucket(n_live, self.ecfg.min_bucket, self.ecfg.max_batch)
+        cache, kv_lens, tokens, keys, _ = fused_compact(
+            cache, kv_lens, tokens, slot_keys, produced, targets, nb=nb)
+        self.step_log.append(
+            {"kind": "compact", "impl": "fused", "batch": nb, "syncs": 0})
+        return cache, kv_lens, tokens, nb, keys
 
     # ------------------------------------------------------------------
     def generate(self, prompts: List[np.ndarray], target_tokens: List[int],
@@ -384,6 +425,7 @@ class Engine:
             targ[:len(ids)] = targets[ids]
             return jnp.asarray(prod), jnp.asarray(targ)
 
+        prod_d = targ_d = None      # device twins of the slot counters
         while True:
             rem = targets[live] - produced[live]
             if elastic:
@@ -391,13 +433,25 @@ class Engine:
                 if len(still) == 0:
                     break
                 if len(still) <= b // 2 and b > self.ecfg.min_bucket:
-                    # map global ids to current slot ids
-                    slot_of = {g: i for i, g in enumerate(live)}
-                    keep = np.array([slot_of[g] for g in still], np.int32)
-                    cache, kv_lens, tok, b, _, slot_keys = self.compact(
-                        cache, kv_lens, tok, keep, slot_keys)
+                    if self.ecfg.compact_impl == "fused":
+                        # device-resident keep: the produced/targets carry
+                        # from the last chunk (or a fresh upload right
+                        # after prefill) selects the live slots in-jit —
+                        # zero additional host syncs
+                        if prod_d is None:
+                            prod_d, targ_d = slot_state(b, live)
+                        cache, kv_lens, tok, b, slot_keys = \
+                            self.compact_fused(cache, kv_lens, tok, prod_d,
+                                               targ_d, len(still), slot_keys)
+                    else:
+                        # host reference path: map global ids to slot ids
+                        slot_of = {g: i for i, g in enumerate(live)}
+                        keep = np.array([slot_of[g] for g in still], np.int32)
+                        cache, kv_lens, tok, b, _, slot_keys = self.compact(
+                            cache, kv_lens, tok, keep, slot_keys)
                     live = still
                     rem = targets[live] - produced[live]
+                    prod_d = targ_d = None   # stale after re-bucketing
             else:
                 if np.all(produced >= targets):
                     break
@@ -406,7 +460,7 @@ class Engine:
             # bounds the executable count at log2(chunk) per bucket
             rem_max = int(rem.max())
             steps = chunk if rem_max >= chunk else 1 << (rem_max.bit_length() - 1)
-            prod_d, targ_d = slot_state(b, live)
+            prod_d, targ_d = slot_state(b, live)     # also feeds compaction
             cache, tok, kv_lens, prod_d, slot_keys, toks, actives, dt = \
                 self.decode_chunk(cache, kv_lens, tok, prod_d, targ_d, steps,
                                   temperature=temperature, top_k=top_k,

@@ -56,6 +56,50 @@ def test_ragged_decode_sweep(b, s, hq, hkv, d, dtype):
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_ragged_agrees_with_dense_model_path(hq, hkv):
+    """The ragged kernel vs the model's DENSE decode attention
+    (``layers.decode_attention``, the ``decode_attention_impl="dense"``
+    branch) — the two implementations the ModelConfig default switches
+    between must agree in fp32 across GQA group shapes (incl. MQA) and
+    ragged per-slot lengths."""
+    from repro.models.layers import decode_attention
+    b, s, d = 4, 256, 64
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    lens = jnp.array([1, 64, 200, s], jnp.int32)
+    ragged = ragged_decode_attention(q, kc, vc, lens, block_kv=64)
+    dense = decode_attention(q[:, None], kc, vc, lens, window=None)[:, 0]
+    np.testing.assert_allclose(np.asarray(ragged), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_impl_auto_resolution():
+    """ModelConfig defaults to impl="auto": ragged on TPU, dense
+    elsewhere; explicit settings pass through untouched."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen2.5-3b")
+    assert cfg.decode_attention_impl == "auto"
+    expected = "ragged" if jax.default_backend() == "tpu" else "dense"
+    assert cfg.resolved_decode_attention_impl == expected
+    for forced in ("ragged", "dense"):
+        c = dataclasses.replace(cfg, decode_attention_impl=forced)
+        assert c.resolved_decode_attention_impl == forced
+
+
+def test_default_interpret_tracks_backend():
+    """kernels.default_interpret centralizes the interpret-mode default:
+    compiled on TPU, interpret everywhere else; explicit flags win."""
+    from repro.kernels import default_interpret, resolve_interpret
+    assert default_interpret() == (jax.default_backend() != "tpu")
+    assert resolve_interpret(None) == default_interpret()
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
 def test_ragged_decode_ignores_stale_cache():
     """Entries beyond lengths must not affect the output (elastic batching:
     a freed slot can hold garbage)."""

@@ -1,0 +1,127 @@
+"""Sharded grid sweeps vs the single-device fastsim/fleet entry points.
+
+The contract (ISSUE 7): ``repro.core.shardsweep`` spreads sweep lanes over
+a "cells" device mesh with ``shard_map`` and must return BIT-equal results
+(same dtype path, exact ``==``) to the vmapped single-device sweeps —
+lanes are elementwise-independent and padding is inert.  On the tier-1
+runner the mesh has size 1 (conftest mandates one device); the subprocess
+test at the bottom forces a real 4-device CPU mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (also the CI
+``kernels`` job's configuration)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import fastsim, fleet, shardsweep
+from repro.core.distributions import LogNormalTokens
+from repro.core.latency_model import BatchLatencyModel
+from repro.core.policies import (
+    DynamicPolicy, ElasticPolicy, FCFSPolicy, SRPTPolicy)
+from repro.core.predictors import LogNormalNoisePredictor
+
+LN = LogNormalTokens()
+LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+LAMS = [0.05, 0.1, 0.15]
+
+
+def test_pad_lane_count():
+    assert shardsweep.pad_lane_count(1, 1) == 2
+    assert shardsweep.pad_lane_count(3, 1) == 4
+    assert shardsweep.pad_lane_count(4, 4) == 4
+    assert shardsweep.pad_lane_count(2, 4) == 4      # mesh >= pow2
+    assert shardsweep.pad_lane_count(6, 4) == 8
+    assert shardsweep.pad_lane_count(5, 3) == 9      # non-pow2 mesh
+    for n in range(1, 40):
+        for d in (1, 2, 4, 8):
+            L = shardsweep.pad_lane_count(n, d)
+            assert L >= n and L % d == 0
+
+
+def test_sweep_matches_single_device():
+    pols = {"dynamic": DynamicPolicy(), "elastic": ElasticPolicy(b_max=8),
+            "fcfs": FCFSPolicy()}       # fcfs: per-cell fallback inside sweep
+    a = fastsim.sweep(pols, LAMS, LN, LAT, num_requests=4_000, seed=0)
+    b = shardsweep.sweep(pols, LAMS, LN, LAT, num_requests=4_000, seed=0)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_sweep_noise_matches_single_device():
+    fac = lambda s: SRPTPolicy(b_max=16,
+                               predictor=LogNormalNoisePredictor(s))
+    a = fastsim.sweep_noise(fac, [0.1, 0.2], [0.0, 0.5, 1.0], LN, LAT,
+                            num_requests=3_000, seed=9)
+    b = shardsweep.sweep_noise(fac, [0.1, 0.2], [0.0, 0.5, 1.0], LN, LAT,
+                               num_requests=3_000, seed=9)
+    np.testing.assert_array_equal(a["mean_wait"], b["mean_wait"])
+    np.testing.assert_array_equal(a["lams"], b["lams"])
+    np.testing.assert_array_equal(a["sigmas"], b["sigmas"])
+
+
+@pytest.mark.parametrize("router", ["round_robin", "least_work"])
+def test_fleet_sweep_matches_single_device(router):
+    a = fleet.sweep([1, 2, 3], LAMS, router, ElasticPolicy(b_max=8), LN,
+                    LAT, num_requests=3_000, seed=1)
+    b = shardsweep.fleet_sweep([1, 2, 3], LAMS, router,
+                               ElasticPolicy(b_max=8), LN, LAT,
+                               num_requests=3_000, seed=1)
+    np.testing.assert_array_equal(a["mean_wait"], b["mean_wait"])
+    np.testing.assert_array_equal(a["R_grid"], b["R_grid"])
+    np.testing.assert_array_equal(a["lams"], b["lams"])
+
+
+def test_fleet_sweep_fallback_for_non_scan_policy():
+    """FCFS has no batch_scan lane -> fleet_sweep must delegate to the
+    per-cell path, still returning identical numbers."""
+    a = fleet.sweep([1, 2], LAMS, "random", FCFSPolicy(), LN, LAT,
+                    num_requests=2_000, seed=2)
+    b = shardsweep.fleet_sweep([1, 2], LAMS, "random", FCFSPolicy(), LN,
+                               LAT, num_requests=2_000, seed=2)
+    np.testing.assert_array_equal(a["mean_wait"], b["mean_wait"])
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.device_count()
+    from repro.core import fastsim, fleet, shardsweep
+    from repro.core.distributions import LogNormalTokens
+    from repro.core.latency_model import BatchLatencyModel
+    from repro.core.policies import DynamicPolicy, ElasticPolicy
+
+    LN = LogNormalTokens()
+    LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+    lams = [0.05, 0.1, 0.15]
+    pols = {"dynamic": DynamicPolicy(), "elastic": ElasticPolicy(b_max=8)}
+    a = fastsim.sweep(pols, lams, LN, LAT, num_requests=3000, seed=0)
+    b = shardsweep.sweep(pols, lams, LN, LAT, num_requests=3000, seed=0)
+    for k in a:
+        assert np.array_equal(a[k], b[k]), k
+    fa = fleet.sweep([1, 2, 3], lams, "least_work", ElasticPolicy(b_max=8),
+                     LN, LAT, num_requests=2000, seed=1)
+    fb = shardsweep.fleet_sweep([1, 2, 3], lams, "least_work",
+                                ElasticPolicy(b_max=8), LN, LAT,
+                                num_requests=2000, seed=1)
+    assert np.array_equal(fa["mean_wait"], fb["mean_wait"])
+    print("OK")
+""")
+
+
+def test_sharded_equality_on_forced_4_device_mesh():
+    """The real multi-device check: a fresh process with 4 forced CPU
+    devices must reproduce the single-device sweep numbers exactly."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
