@@ -1,0 +1,137 @@
+"""PR 8: closed-loop autoscaling under non-stationary traffic.
+
+Three control questions:
+
+1. **Regret vs clairvoyant**: on a bursty sinusoidal workload
+   (amplitude 0.9, period 2000 s at lam=8) the adaptive controller
+   re-picks ``(replicas, router, shed_prob)`` every window from its own
+   observed delay/backlog.  The benchmark compares its cost-aware
+   objective (mean wait + replica-hours + shed penalty) against every
+   static power-of-two ``(R, router)`` configuration AND against the
+   clairvoyant per-window optimum.  Acceptance: adaptive strictly beats
+   the best static config; regret = adaptive - clairvoyant is recorded.
+2. **Traffic model sweep**: mean wait of a fixed fleet under every
+   registered traffic model at matched long-run rate — burstiness must
+   cost delay relative to stationary arrivals (the modulation analogue
+   of the paper's variance penalty).
+3. **Action trace**: the adaptive replica trajectory is recorded so
+   regressions in controller behavior (e.g. stuck at max_replicas) are
+   visible in the artifact, not just the scalar.
+
+Recorded as the ``pr8_autoscale`` key of ``BENCH_simulators.json``
+(``emit_bench(..., key=...)`` — pr1..pr7 keys are never replaced).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):          # direct `python bench_....py` run
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, emit_bench, timer
+
+
+def main(quick: bool = False):
+    from repro.core.distributions import LogNormalTokens
+    from repro.core.fastsim import run_controlled, simulate_fleet_fast
+    from repro.core.latency_model import BatchLatencyModel
+    from repro.core.policies import ElasticPolicy
+    from repro.core.traffic import SinusoidTraffic, default_traffic
+
+    dist = LogNormalTokens(5.0, 0.8)
+    lat = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+    policy = ElasticPolicy()
+    lam, seed, max_r = 8.0, 0, 8
+    # quick mode shrinks horizon 4x; scale period/window with it so the
+    # run still covers two full bursts with the same windows-per-period
+    n_req, window, period = ((8_000, 50.0, 500.0) if quick
+                             else (32_000, 200.0, 2000.0))
+    traffic = SinusoidTraffic(amplitude=0.9, period=period)
+    cost = dict(replica_cost=5.0, shed_cost=0.0)
+    kw = dict(traffic=traffic, num_requests=n_req, seed=seed, window=window,
+              max_replicas=max_r, **cost)
+
+    derived = {}
+    with timer() as t_all:
+        # ------ 1: adaptive vs static grid vs clairvoyant ------
+        t0 = time.perf_counter()
+        adaptive = run_controlled(
+            policy, lam, dist, lat,
+            controller_kwargs={"replica_target_util": 0.4}, **kw)
+        static_rows = []
+        for R in (1, 2, 4, 8):
+            for router in ("round_robin", "least_work"):
+                res = run_controlled(policy, lam, dist, lat,
+                                     fixed=(R, router), **kw)
+                static_rows.append({"replicas": R, "router": router,
+                                    "mean_wait": res.mean_wait,
+                                    "objective": res.objective})
+        best_static = min(static_rows, key=lambda r: r["objective"])
+        clair = run_controlled(policy, lam, dist, lat, clairvoyant=True,
+                               **kw)
+        t_ctrl = time.perf_counter() - t0
+
+        regret = adaptive.objective - clair.objective
+        derived["adaptive_objective"] = adaptive.objective
+        derived["best_static_objective"] = best_static["objective"]
+        derived["clairvoyant_objective"] = clair.objective
+        derived["regret"] = regret
+        # acceptance: the time-sliced controller strictly beats the best
+        # static (R, router) on this bursty workload.  The clairvoyant
+        # picks each window's (R, router) with the realized arrivals in
+        # hand but is myopic about backlog carried into later windows,
+        # so regret is a benchmark, not a sign-definite bound — it only
+        # has to be finite and small relative to the static gap.
+        assert adaptive.objective < best_static["objective"], (
+            adaptive.objective, best_static)
+        assert np.isfinite(regret)
+        assert abs(regret) < best_static["objective"], (regret, best_static)
+
+        # ------ 2: traffic model sweep at matched mean rate ------
+        sweep = []
+        for name, tm in default_traffic().items():
+            res = simulate_fleet_fast("least_work", policy, lam, 4, dist,
+                                      lat, num_requests=min(n_req, 16_000),
+                                      seed=seed, traffic=tm)
+            sweep.append({"traffic": name,
+                          "mean_wait": float(res["mean_wait"])})
+            derived[f"wait_{name}"] = sweep[-1]["mean_wait"]
+        by_name = {r["traffic"]: r["mean_wait"] for r in sweep}
+        # burstiness costs delay vs stationary arrivals at equal rate
+        # (sinusoid at amplitude 0.6 is burst-dominant at any seed; the
+        # milder mmpp/trace defaults must at least visibly modulate)
+        assert by_name["sinusoid"] > by_name["stationary"], by_name
+        for name in ("mmpp", "trace"):
+            assert by_name[name] != by_name["stationary"], by_name
+
+    emit_bench("simulators", {
+        "workload": f"lognormal(5,0.8) lam={lam} elastic; sinusoid "
+                    f"amp=0.9 period={period}; {n_req} requests, "
+                    f"window={window}, max_replicas={max_r}, "
+                    f"replica_cost={cost['replica_cost']}",
+        "adaptive": {"mean_wait": adaptive.mean_wait,
+                     "avg_replicas": adaptive.avg_replicas,
+                     "objective": adaptive.objective,
+                     "shed": adaptive.shed},
+        "static_grid": static_rows,
+        "best_static": best_static,
+        "clairvoyant": {"mean_wait": clair.mean_wait,
+                        "avg_replicas": clair.avg_replicas,
+                        "objective": clair.objective},
+        "regret": regret,
+        "replica_trace": [a.replicas for a in adaptive.actions],
+        "traffic_sweep": sweep,
+        "control_s": t_ctrl,
+    }, key="pr8_autoscale")
+    emit("autoscale_regret", t_all.seconds, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("REPRO_BENCH_QUICK", "0") == "1")

@@ -92,7 +92,9 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     scheduler adapter, and every registered router runs a small fleet
     end-to-end on both the fast fleet simulator and ``FleetScheduler``.
     Every registered fault model (docs/faults.md) runs the fault-injected
-    fleet on both layers with closed accounting."""
+    fleet on both layers with closed accounting, and every registered
+    traffic model (docs/traffic.md) runs both simulator layers with
+    oracle == fastsim equality and bit-exact stationary conformance."""
     from repro.core.distributions import UniformTokens
     from repro.core.fastsim import simulate_fleet_fast, simulate_policy_fast
     from repro.core.fleet import ROUTERS, default_routers
@@ -119,7 +121,8 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     assert not missing_r, f"default_routers() misses registered: {missing_r}"
     docs = _load_check_docs()
     doc_errors = (docs.check_policy_docs() + docs.check_predictor_docs()
-                  + docs.check_router_docs() + docs.check_fault_docs())
+                  + docs.check_router_docs() + docs.check_fault_docs()
+                  + docs.check_traffic_docs())
     assert not doc_errors, doc_errors
     out = {}
     for name, pol in policies.items():
@@ -169,6 +172,30 @@ def registry_coverage(n_req: int = 4_000) -> dict:
                     + res["unserved"] == res["n_arrived"]), (fname, fast)
         out[f"fault:{fname}"] = {"sim": res["mean_wait"],
                                  "served": res["n_served"]}
+    # every registered traffic model (docs/traffic.md) runs both
+    # simulator layers with oracle == fastsim trajectories, and its null
+    # (zero-modulation) instance must stay bit-equal to the stationary
+    # path — so a traffic model that stops running, diverges across
+    # layers, or breaks stationary conformance fails the build
+    from repro.core.simulate import simulate_policy
+    from repro.core.traffic import default_traffic, null_traffic
+    nulls = null_traffic()
+    for tname, tm in default_traffic().items():
+        o = simulate_policy(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                            num_requests=min(n_req, 1_000), seed=3,
+                            traffic=tm)
+        fsim = simulate_policy_fast(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                                    num_requests=min(n_req, 1_000), seed=3,
+                                    traffic=tm)
+        np.testing.assert_allclose(o["waits"], fsim["waits"], atol=1e-9,
+                                   err_msg=tname)
+        base = simulate_policy_fast(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                                    num_requests=min(n_req, 1_000), seed=3)
+        null = simulate_policy_fast(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                                    num_requests=min(n_req, 1_000), seed=3,
+                                    traffic=nulls[tname])
+        assert np.array_equal(base["waits"], null["waits"]), tname
+        out[f"traffic:{tname}"] = {"sim": fsim["mean_wait"]}
     return out
 
 

@@ -111,6 +111,14 @@ def check_fault_docs() -> list:
                                 "fault model")
 
 
+def check_traffic_docs() -> list:
+    _src_on_path()
+    from repro.core.traffic import TRAFFIC
+    return _check_registry_docs(TRAFFIC, os.path.join("docs",
+                                                      "traffic.md"),
+                                "traffic model")
+
+
 def check_performance_docs() -> list:
     """docs/performance.md must exist and mention the tunable perf
     surface by name, so a rename or removal cannot leave the page
@@ -132,13 +140,13 @@ def check_performance_docs() -> list:
 def main() -> int:
     errors = (check_links() + check_policy_docs() + check_predictor_docs()
               + check_router_docs() + check_fault_docs()
-              + check_performance_docs())
+              + check_traffic_docs() + check_performance_docs())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         files = len(doc_files())
         print(f"check_docs: OK ({files} files, links + policy/predictor/"
-              f"router/fault coverage + performance page)")
+              f"router/fault/traffic coverage + performance page)")
     return 1 if errors else 0
 
 

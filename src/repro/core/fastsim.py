@@ -104,7 +104,8 @@ def kernel(name: str):
 def simulate_policy_fast(policy: BatchPolicy, lam: float,
                          dist: Optional[TokenDistribution], lat,
                          num_requests: int = 200_000, seed: int = 0,
-                         workload=None, fault_trace=None) -> dict:
+                         workload=None, fault_trace=None,
+                         traffic=None) -> dict:
     """Fast twin of :func:`repro.core.simulate.simulate_policy`: dispatch to
     the policy's compiled kernel, or fall back to the oracle when the
     policy has none (``fast_kernel=None``).
@@ -119,9 +120,22 @@ def simulate_policy_fast(policy: BatchPolicy, lam: float,
     the transform arithmetic is the SAME host-side code
     (``simulate._with_fault_trace``), only the inner fault-free run is
     the compiled kernel — so oracle and fastsim see bit-identical
-    epochs and trajectory-equal faulty waits."""
+    epochs and trajectory-equal faulty waits.
+
+    ``traffic`` modulates the arrival rate exactly like the oracle
+    twin's parameter: the HOST-side time-rescaling warp runs before the
+    kernel sees the workload, so both layers simulate the identical
+    modulated arrival instants; a null model never warps (the kernel
+    keeps its internal sampling path, bit-equal to PR 5/6/7)."""
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         lat = single_from_batch(lat)
+    if traffic is not None:
+        from repro.core.traffic import traffic_from_spec, warp_workload
+        tm = traffic_from_spec(traffic)
+        if not tm.is_null:
+            wl = workload if workload is not None else \
+                policy.sample_workload(lam, dist, num_requests, seed)
+            workload = warp_workload(wl, tm, seed)
     if policy.fast_kernel is None:
         return simulate_policy(policy, lam, dist, lat,
                                num_requests=num_requests, seed=seed,
@@ -933,15 +947,29 @@ def masked_backlog_route(arrivals, work, up, R: int) -> np.ndarray:
 
 def simulate_fleet_fast(router, policy: BatchPolicy, lam: float, R: int,
                         dist: Optional[TokenDistribution], lat,
-                        num_requests: int = 100_000, seed: int = 0) -> dict:
+                        num_requests: int = 100_000, seed: int = 0,
+                        traffic=None) -> dict:
     """Fast twin of :func:`repro.core.fleet.route_oracle`: the router's
     split is identical (state-dependent assignment via the jitted backlog
     scan), and each replica's sub-workload runs through the policy's
-    compiled single-server kernel (oracle fallback when it has none)."""
+    compiled single-server kernel (oracle fallback when it has none).
+    ``traffic`` modulates the arrival stream before routing, exactly
+    like the oracle twin's parameter."""
     from repro.core.fleet import router_from_spec, run_fleet
     router = router_from_spec(router)
     fw = router.fleet_workload(policy, lam, dist, lat, num_requests, seed,
-                               R, fast=True)
+                               R, fast=True, traffic=traffic)
     return run_fleet(fw, policy, lat, dist,
                      lambda pol, wl: simulate_policy_fast(
                          pol, lam, dist, lat, workload=wl))
+
+
+def run_controlled(policy, lam, dist, lat, **kw):
+    """Closed-loop time-sliced control on the fast path: the compiled
+    kernels run every window, the controller re-picks replicas / router /
+    bin_edges / shed_prob between windows.  Thin wrapper over
+    :func:`repro.core.control.simulate_controlled` with ``fast=True``
+    (pass ``fast=False`` there for the reference-oracle twin)."""
+    from repro.core.control import simulate_controlled
+    kw.setdefault("fast", True)
+    return simulate_controlled(policy, lam, dist, lat, **kw)

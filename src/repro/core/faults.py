@@ -522,7 +522,8 @@ def _replica_waits(policy: BatchPolicy, sub: Workload, lam, dist, lat,
 
 def simulate_fleet_faulty(router, policy: BatchPolicy, lam: float, R: int,
                           dist, lat, fault, num_requests: int = 20_000,
-                          seed: int = 0, fast: bool = False) -> dict:
+                          seed: int = 0, fast: bool = False,
+                          traffic=None) -> dict:
     """Fault-injected fleet simulation — ONE driver for both layers
     (``fast=False``: reference event loops; ``fast=True``: compiled
     kernels), so oracle and fastsim see identical failure epochs,
@@ -541,13 +542,21 @@ def simulate_fleet_faulty(router, policy: BatchPolicy, lam: float, R: int,
     to a surviving replica at ``epoch + backoff * 2**attempt``.  Waits
     are reported against each request's ORIGINAL arrival.  Returns the
     fleet aggregate plus fault accounting (conservation:
-    ``served + shed + failed + unserved == arrived``)."""
+    ``served + shed + failed + unserved == arrived``).
+
+    ``traffic`` (a :mod:`repro.core.traffic` model, name or spec)
+    modulates the arrival rate via the time-rescaling warp; the fault
+    stream is salted independently, so modulation never perturbs the
+    failure epochs (and vice versa)."""
     from repro.core.fleet import router_from_spec
     from repro.core.simulate import _warm
     fault = fault_from_spec(fault)
     router = router_from_spec(router)
 
     wl = policy.sample_workload(lam, dist, num_requests, seed)
+    if traffic is not None:
+        from repro.core.traffic import warp_workload
+        wl = warp_workload(wl, traffic, seed)
     n = len(wl.arrivals)
     horizon = float(wl.arrivals[-1]) * 2.0 + 1.0
     traces = [fault.trace(seed, r, horizon) for r in range(R)]
@@ -557,11 +566,13 @@ def simulate_fleet_faulty(router, policy: BatchPolicy, lam: float, R: int,
         if fast:
             from repro.core.fastsim import simulate_fleet_fast
             res = simulate_fleet_fast(router, policy, lam, R, dist, lat,
-                                      num_requests=num_requests, seed=seed)
+                                      num_requests=num_requests, seed=seed,
+                                      traffic=traffic)
         else:
             from repro.core.fleet import route_oracle
             res = route_oracle(router, policy, lam, R, dist, lat,
-                               num_requests=num_requests, seed=seed)
+                               num_requests=num_requests, seed=seed,
+                               traffic=traffic)
         res.update(shed=0, retries=0, failed=0, unserved=0,
                    availability=[1.0] * R, n_arrived=n, n_served=n)
         return res

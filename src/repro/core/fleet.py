@@ -251,12 +251,21 @@ class RoutingPolicy:
     def fleet_workload(self, policy: BatchPolicy, lam: float,
                        dist: Optional[TokenDistribution], lat,
                        num_requests: int, seed: int, R: int,
-                       fast: bool = False) -> FleetWorkload:
+                       fast: bool = False, traffic=None) -> FleetWorkload:
         """Sample the global stream through the policy's workload law and
         split it.  R=1 passes the policy's native workload through
         untouched, so a one-replica fleet is bit-equal to the
-        single-server path for every router."""
+        single-server path for every router.
+
+        ``traffic`` (a :mod:`repro.core.traffic` model, name or spec)
+        warps the sampled arrivals through the modulation's
+        time-rescaling transform BEFORE routing — every router sees the
+        same modulated instants; a null model leaves the stream
+        bit-identical."""
         wl = policy.sample_workload(lam, dist, num_requests, seed)
+        if traffic is not None:
+            from repro.core.traffic import warp_workload
+            wl = warp_workload(wl, traffic, seed)
         if R == 1:
             return FleetWorkload([wl], np.zeros(len(wl.arrivals), np.int64),
                                  wl.arrivals, 1)
@@ -339,13 +348,21 @@ class RandomRouter(RoutingPolicy):
         return _route_rng(seed).integers(0, R, len(arrivals))
 
     def fleet_workload(self, policy, lam, dist, lat, num_requests, seed, R,
-                       fast: bool = False) -> FleetWorkload:
+                       fast: bool = False, traffic=None) -> FleetWorkload:
         if R == 1:
             return super().fleet_workload(policy, lam, dist, lat,
-                                          num_requests, seed, R, fast)
+                                          num_requests, seed, R, fast,
+                                          traffic=traffic)
         n_per = max(num_requests // R, 1)
         subs = [policy.sample_workload(lam / R, dist, n_per, (seed, r))
                 for r in range(R)]
+        if traffic is not None:
+            # superposition transfers to modulated arrivals: each λ/R
+            # sub-stream is warped through the SAME profile (base seed,
+            # one shared environment), so the merge is the inhomogeneous
+            # Poisson(λ·m(t)) process with iid uniform replica marks
+            from repro.core.traffic import warp_workload
+            subs = [warp_workload(wl, traffic, seed) for wl in subs]
         arr = np.concatenate([wl.arrivals for wl in subs])
         rep = np.concatenate([np.full(len(wl.arrivals), r, np.int64)
                               for r, wl in enumerate(subs)])
@@ -469,13 +486,16 @@ def run_fleet(fw: FleetWorkload, policy: BatchPolicy, lat,
 
 def route_oracle(router, policy: BatchPolicy, lam: float, R: int,
                  dist: Optional[TokenDistribution], lat,
-                 num_requests: int = 100_000, seed: int = 0) -> dict:
+                 num_requests: int = 100_000, seed: int = 0,
+                 traffic=None) -> dict:
     """Fleet reference oracle: route, then reuse the single-server
     reference event loops (``repro.core.simulate``) per replica,
-    unchanged.  ``router``: a RoutingPolicy, registry name, or spec."""
+    unchanged.  ``router``: a RoutingPolicy, registry name, or spec.
+    ``traffic`` modulates the arrival stream before routing."""
     from repro.core.simulate import simulate_policy
     router = router_from_spec(router)
-    fw = router.fleet_workload(policy, lam, dist, lat, num_requests, seed, R)
+    fw = router.fleet_workload(policy, lam, dist, lat, num_requests, seed, R,
+                               traffic=traffic)
     return run_fleet(fw, policy, lat, dist,
                      lambda pol, wl: simulate_policy(
                          pol, lam, dist, lat, workload=wl))

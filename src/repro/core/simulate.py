@@ -86,7 +86,7 @@ def simulate_policy(policy: BatchPolicy, lam: float,
                     dist: Optional[TokenDistribution], lat,
                     num_requests: int = 200_000, seed: int = 0,
                     workload: Optional[Workload] = None,
-                    fault_trace=None) -> dict:
+                    fault_trace=None, traffic=None) -> dict:
     """Run ``policy`` through its reference event loop.  ``lat`` is the
     policy's latency law (``LatencyModel`` for single-service policies,
     ``BatchLatencyModel`` otherwise — a batch law handed to a
@@ -104,12 +104,20 @@ def simulate_policy(policy: BatchPolicy, lam: float,
     freeze while the server is down), and service starts are mapped back
     to wall-clock — exactly a work-conserving queue on a breaking server
     (preemptive-resume).  Crash-mode work loss is layered on top by
-    :func:`repro.core.faults.simulate_fleet_faulty`."""
+    :func:`repro.core.faults.simulate_fleet_faulty`.
+
+    ``traffic`` (a :mod:`repro.core.traffic` model, name or spec)
+    modulates the arrival rate by warping the sampled arrivals through
+    the model's time-rescaling transform; a null model leaves the
+    trajectory bit-identical (the warp is never applied)."""
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         from repro.core.policies import single_from_batch
         lat = single_from_batch(lat)
     wl = workload if workload is not None else \
         policy.sample_workload(lam, dist, num_requests, seed)
+    if traffic is not None:
+        from repro.core.traffic import warp_workload
+        wl = warp_workload(wl, traffic, seed)
     if fault_trace is not None and not fault_trace.empty:
         return _with_fault_trace(
             lambda op_wl: ORACLES[policy.oracle_kind](policy, op_wl, lat,

@@ -103,16 +103,28 @@ def correlated_prompt_len(out_tokens: float, corr: float,
 
 def make_request_stream(num: int, lam: float, dist: TokenDistribution,
                         vocab: int, prompt_len_range=(8, 64),
-                        seed: int = 0, prompt_len_corr: float = 0.0):
+                        seed: int = 0, prompt_len_corr: float = 0.0,
+                        traffic=None):
     """Poisson arrivals + iid output-token requirements (the paper's model).
 
     ``prompt_len_corr=0`` (default) keeps prompt lengths independent of
     the output requirement — the historical stream, bit-identical to
     earlier seeds.  ``prompt_len_corr>0`` draws prompt lengths from
     :func:`correlated_prompt_len` instead, giving prompt-derived length
-    predictors a real signal."""
+    predictors a real signal.
+
+    ``traffic`` (a :mod:`repro.core.traffic` model, registry name or
+    spec) modulates the arrival RATE: the stationary arrivals are drawn
+    in the exact historical rng call order, then pushed through the
+    model's time-rescaling warp — tokens and prompts are bit-identical
+    with modulation on or off, and a null model (``None``, or any
+    registered model at zero modulation) leaves the arrivals themselves
+    bit-identical too."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / lam, num))
+    if traffic is not None:
+        from repro.core.traffic import traffic_from_spec
+        arrivals = traffic_from_spec(traffic).warp(arrivals, seed)
     outs = dist.sample(rng, num)
     reqs = []
     for i in range(num):

@@ -99,6 +99,35 @@ def _death_spans(trace, kill_time: Optional[float],
     return sorted(spans)
 
 
+def scale_spans(schedule: List[Tuple[float, int]], R: int,
+                horizon: float) -> List[List[Tuple[float, float]]]:
+    """Autoscale schedule -> per-replica down spans.
+
+    ``schedule`` is ``[(t, active), ...]``: from time ``t`` on, replicas
+    ``0..active-1`` are in service (before the first entry all ``R``
+    are).  Replica ``r`` is DOWN exactly while ``active <= r``, so a
+    scale-down is a planned death (the drain/re-dispatch machinery of
+    :func:`run_resilient_fleet` applies unchanged: backlog killed at the
+    epoch, re-dispatched to surviving replicas with backoff) and a
+    replica scaled up at ``t`` is masked out of routing on ``[0, t)``
+    and simply receives no work until then.  Power-of-two active counts
+    keep the per-replica kernel shapes compile-cached."""
+    end = horizon * 2.0 + 1.0
+    sched = sorted((float(t), int(a)) for t, a in schedule)
+    times = [0.0] + [t for t, _ in sched] + [end]
+    active = [R] + [min(max(a, 0), R) for _, a in sched]
+    spans: List[List[Tuple[float, float]]] = [[] for _ in range(R)]
+    for r in range(R):
+        for k, a in enumerate(active):
+            if a <= r and times[k] < times[k + 1]:
+                if spans[r] and spans[r][-1][1] == times[k]:
+                    s, _ = spans[r].pop()
+                    spans[r].append((s, times[k + 1]))
+                else:
+                    spans[r].append((times[k], times[k + 1]))
+    return spans
+
+
 def _up_row(spans_of: List[List[Tuple[float, float]]], t: float
             ) -> np.ndarray:
     up = np.array([not any(s <= t < e for s, e in spans)
@@ -153,11 +182,20 @@ def run_resilient_fleet(router, policy: BatchPolicy, reqs: List[Request],
                         hedge_slo: Optional[float] = None,
                         max_retries: Optional[int] = None,
                         retry_backoff: Optional[float] = None,
+                        scale_schedule: Optional[List[Tuple[float, int]]] = None,
+                        down_spans: Optional[
+                            List[List[Tuple[float, float]]]] = None,
                         batch_lat=None, clock=None) -> ResilientFleetResult:
     """The resilient twin of ``repro.serving.router._route_and_dispatch``:
     same router, same global prediction column, same per-replica
     ``runner(replica, sub_reqs, predicted_slice)`` contract — plus death
-    handling, retries, hedging and shedding (module docstring)."""
+    handling, retries, hedging and shedding (module docstring).
+
+    ``scale_schedule`` (``[(t, active), ...]``, see :func:`scale_spans`)
+    and ``down_spans`` (explicit per-replica ``[(start, end), ...]``)
+    overlay planned unavailability on top of fault traces: scale-downs
+    drain through the same masked re-dispatch as crashes, scale-ups
+    receive no traffic before their start."""
     from repro.serving.scheduler import _request_predictions
 
     router = router_from_spec(router)
@@ -173,6 +211,13 @@ def run_resilient_fleet(router, policy: BatchPolicy, reqs: List[Request],
     kill_at = dict(kill_at or {})
     spans_of = [_death_spans(traces[r], kill_at.get(r), horizon)
                 for r in range(R)]
+    if scale_schedule is not None:
+        planned = scale_spans(list(scale_schedule), R, horizon)
+        spans_of = [sorted(spans_of[r] + planned[r]) for r in range(R)]
+    if down_spans is not None:
+        spans_of = [sorted(spans_of[r] + [(float(s), float(e))
+                                          for s, e in down_spans[r]])
+                    for r in range(R)]
 
     # ---- admission shedding ------------------------------------------
     shed = fault.drop_mask(seed, n).copy()
@@ -344,7 +389,10 @@ class ResilientFleetScheduler:
                  seed: int = 0, shed_prob: float = 0.0,
                  hedge_slo: Optional[float] = None,
                  max_retries: Optional[int] = None,
-                 retry_backoff: Optional[float] = None):
+                 retry_backoff: Optional[float] = None,
+                 scale_schedule: Optional[List[Tuple[float, int]]] = None,
+                 down_spans: Optional[
+                     List[List[Tuple[float, float]]]] = None):
         assert R >= 1
         self.router = router_from_spec(router)
         self.policy = policy
@@ -359,6 +407,8 @@ class ResilientFleetScheduler:
         self.hedge_slo = hedge_slo
         self.max_retries = max_retries
         self.retry_backoff = retry_backoff
+        self.scale_schedule = scale_schedule
+        self.down_spans = down_spans
 
     def run(self, reqs: List[Request]) -> ResilientFleetResult:
         pol = self.policy
@@ -376,6 +426,7 @@ class ResilientFleetScheduler:
             faults=self.faults, kill_at=self.kill_at, seed=self.seed,
             shed_prob=self.shed_prob, hedge_slo=self.hedge_slo,
             max_retries=self.max_retries, retry_backoff=self.retry_backoff,
+            scale_schedule=self.scale_schedule, down_spans=self.down_spans,
             batch_lat=getattr(self.clock, "batch", None),
             clock=self.clock if isinstance(self.clock, ModelClock) else None)
 

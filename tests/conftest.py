@@ -1,6 +1,24 @@
 import os
 import sys
 
+import pytest
+
 # smoke tests and benches must see ONE device (the dry-run sets its own
 # XLA_FLAGS inside its own process; never here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runregret", action="store_true", default=False,
+        help="run the multi-seed autoscale regret sweeps (slow; the CI "
+             "autoscale job passes this, tier-1 does not)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runregret"):
+        return
+    skip = pytest.mark.skip(reason="needs --runregret")
+    for item in items:
+        if "regret" in item.keywords:
+            item.add_marker(skip)

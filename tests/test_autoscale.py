@@ -1,0 +1,261 @@
+"""PR 8 conformance harness, control half: closed-loop autoscaling.
+
+Pins the closed-loop driver (``control.simulate_controlled`` /
+``fastsim.run_controlled``), the controller laws it consults, and the
+serving-layer scale-schedule drain protocol:
+
+1. **Controller units** — ``observe_episode``/``availability_hat``
+   renewal math, ``shed_probability`` edges (idle, overload,
+   availability discount) and ``fleet.recommend_replicas`` edges
+   (lam -> 0, lam near capacity, max_replicas clamp).
+2. **Driver conformance** — controller-action determinism, fast==oracle
+   trajectory equality, and a single-window fixed R=1 run pinned
+   bit-exactly to the plain PR 2 simulator.
+3. **Scale-schedule conservation** — scaling the serving fleet down
+   mid-run (including during a crash episode) never loses a request:
+   served + shed + failed == arrived.
+
+Multi-seed regret sweeps live behind the ``regret`` marker
+(``--runregret``) so tier-1 stays fast.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.control import (AdaptiveController, pow2_replicas,
+                                simulate_controlled)
+from repro.core.distributions import LogNormalTokens
+from repro.core.fastsim import run_controlled
+from repro.core.fleet import recommend_replicas
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policies import DynamicPolicy, ElasticPolicy, single_from_batch
+from repro.core.simulate import no_warmup, simulate_policy
+from repro.core.traffic import SinusoidTraffic
+from repro.serving.resilience import ResilientFleetScheduler, scale_spans
+from repro.serving.scheduler import ModelClock, Request
+
+LN = LogNormalTokens(5.0, 0.6)
+LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+SINGLE = single_from_batch(LAT)
+
+
+# ---------------------------------------------------------------------------
+# 1: controller units
+# ---------------------------------------------------------------------------
+
+def _controller(**kw):
+    kw.setdefault("max_replicas", 8)
+    return AdaptiveController(SINGLE, LAT, **kw)
+
+
+def test_availability_hat_renewal_math():
+    c = _controller()
+    assert c.availability_hat() == 1.0          # fault-free prior
+    c.observe_episode(90.0, 10.0)
+    assert abs(c.availability_hat() - 0.9) < 1e-12
+    c.observe_episode(30.0, 70.0)               # pooled, not averaged
+    assert abs(c.availability_hat() - 120.0 / 200.0) < 1e-12
+
+
+def test_shed_probability_idle_and_overload():
+    c = _controller(replica_target_util=0.5)
+    assert c.shed_probability(0.0, LN) == 0.0   # lam -> 0: admit all
+    assert c.shed_probability(2.0, None) == 0.0  # no dist yet: admit all
+    alpha = LAT.k1 + LAT.k3 * LN.mean()
+    cap = 8 * 0.5 / alpha                        # full-availability edge
+    assert c.shed_probability(cap * 0.99, LN) == 0.0
+    p = c.shed_probability(cap * 2.0, LN)
+    assert abs(p - 0.5) < 1e-9                   # shed exactly the excess
+    assert 0.0 <= c.shed_probability(cap * 100.0, LN) <= 1.0
+
+
+def test_shed_probability_availability_discount():
+    c = _controller(replica_target_util=0.5)
+    alpha = LAT.k1 + LAT.k3 * LN.mean()
+    lam = 8 * 0.5 / alpha                        # exactly at capacity
+    assert c.shed_probability(lam, LN) <= 1e-9
+    c.observe_episode(50.0, 50.0)                # availability drops to 0.5
+    p = c.shed_probability(lam, LN)
+    assert abs(p - 0.5) < 1e-9                   # half the fleet is gone
+
+
+def test_recommend_replicas_edges():
+    assert recommend_replicas(1e-9, LN, LAT) == 1       # lam -> 0
+    r_mid = recommend_replicas(4.0, LN, LAT, max_replicas=64)
+    assert 1 <= r_mid <= 64
+    # near-capacity load needs more replicas than light load
+    assert recommend_replicas(16.0, LN, LAT, max_replicas=64) > \
+        recommend_replicas(0.5, LN, LAT, max_replicas=64)
+    # the clamp binds
+    assert recommend_replicas(1e6, LN, LAT, max_replicas=8) == 8
+
+
+def test_pow2_replicas():
+    assert pow2_replicas(1, 8) == 1
+    assert pow2_replicas(3, 8) == 4
+    assert pow2_replicas(5, 8) == 8
+    assert pow2_replicas(9, 8) == 8     # clamped to largest pow2 <= max
+    assert pow2_replicas(5, 6) == 4     # max_replicas itself not a pow2
+
+
+# ---------------------------------------------------------------------------
+# 2: driver conformance
+# ---------------------------------------------------------------------------
+
+CTRL_KW = dict(traffic=SinusoidTraffic(amplitude=0.8, period=250.0),
+               num_requests=2_000, seed=1, window=50.0, max_replicas=4,
+               replica_cost=1.0)
+
+
+def test_controller_actions_deterministic():
+    a = run_controlled(ElasticPolicy(), 4.0, LN, LAT, **CTRL_KW)
+    b = run_controlled(ElasticPolicy(), 4.0, LN, LAT, **CTRL_KW)
+    assert a.actions == b.actions
+    assert np.array_equal(a.waits, b.waits)
+    assert a.objective == b.objective
+
+
+def test_fast_equals_oracle_trajectory():
+    f = simulate_controlled(ElasticPolicy(), 4.0, LN, LAT, fast=True,
+                            **CTRL_KW)
+    o = simulate_controlled(ElasticPolicy(), 4.0, LN, LAT, fast=False,
+                            **CTRL_KW)
+    assert f.actions == o.actions
+    np.testing.assert_allclose(f.waits, o.waits, rtol=0, atol=1e-6)
+
+
+def test_adaptive_scales_with_the_burst():
+    res = run_controlled(ElasticPolicy(), 4.0, LN, LAT, **CTRL_KW)
+    rs = [a.replicas for a in res.actions]
+    assert min(rs) < max(rs), "controller must actually change fleet size"
+    assert all(r in (1, 2, 4) for r in rs), rs   # pow2, clamped
+    assert res.served + res.shed == len(res.waits) + res.shed
+
+
+def test_single_window_fixed_r1_pins_plain_simulator():
+    # one window, one replica, no shedding: the closed-loop driver IS the
+    # PR 2 simulator (full-length waits, no warmup trim)
+    pol = DynamicPolicy(8)
+    tm = SinusoidTraffic(amplitude=0.5, period=100.0)
+    res = simulate_controlled(pol, 2.0, LN, LAT, traffic=tm,
+                              num_requests=400, seed=9, window=1e9,
+                              fixed=(1, "round_robin"), fast=False)
+    assert len(res.windows) == 1
+    with no_warmup():
+        base = simulate_policy(pol, 2.0, LN, LAT, num_requests=400,
+                               seed=9, traffic=tm)
+    np.testing.assert_array_equal(res.waits, base["waits"])
+
+
+def test_fixed_vs_clairvoyant_are_exclusive():
+    with pytest.raises(AssertionError):
+        simulate_controlled(ElasticPolicy(), 4.0, LN, LAT,
+                            num_requests=200, fixed=(2, "round_robin"),
+                            clairvoyant=True)
+
+
+def test_objective_accounting():
+    res = run_controlled(ElasticPolicy(), 4.0, LN, LAT, shed_cost=2.0,
+                         **CTRL_KW)
+    n = res.served + res.shed
+    expect = (res.mean_wait + res.replica_cost * res.avg_replicas
+              + res.shed_cost * res.shed / n)
+    assert abs(res.objective - expect) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# 3: serving-layer scale schedule — drain conservation
+# ---------------------------------------------------------------------------
+
+def _reqs(n=300, lam=3.0, seed=0):
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / lam, n))
+    toks = LN.sample(np.random.default_rng(seed + 1), n)
+    return [Request(i, float(a), np.zeros(4, np.int32), int(t))
+            for i, (a, t) in enumerate(zip(arr, toks))]
+
+
+def test_scale_spans_shapes():
+    sp = scale_spans([(10.0, 1), (20.0, 3), (30.0, 2)], 4, 50.0)
+    assert sp[0] == []                            # replica 0 always up
+    assert sp[1] == [(10.0, 20.0)]
+    assert sp[2][0] == (10.0, 20.0) and sp[2][1][0] == 30.0
+    assert sp[3][0][0] == 10.0 and sp[3][0][1] > 50.0  # never back up
+
+
+def _clock():
+    return ModelClock(LatencyModel(0.0205, 0.55), LAT)
+
+
+def test_scale_down_conserves_requests():
+    reqs = _reqs()
+    horizon = reqs[-1].arrival
+    res = ResilientFleetScheduler(
+        "least_work", DynamicPolicy(8), _clock(), 4,
+        scale_schedule=[(horizon * 0.3, 2), (horizon * 0.6, 4)]).run(reqs)
+    rep = res.resilience
+    assert rep.served + rep.shed + rep.failed == rep.arrived == len(reqs)
+    assert rep.served > 0
+    # scaled-down replicas show reduced availability in the report
+    assert min(rep.availability) < 1.0
+
+
+def test_scale_down_during_crash_conserves_requests():
+    reqs = _reqs()
+    horizon = reqs[-1].arrival
+    res = ResilientFleetScheduler(
+        "least_work", DynamicPolicy(8), _clock(), 4,
+        kill_at={1: horizon * 0.25},
+        scale_schedule=[(horizon * 0.3, 2), (horizon * 0.6, 4)]).run(reqs)
+    rep = res.resilience
+    assert rep.served + rep.shed + rep.failed == rep.arrived == len(reqs)
+
+
+def test_noop_schedule_is_bit_identical():
+    reqs = _reqs()
+    base = ResilientFleetScheduler("least_work", DynamicPolicy(8),
+                                   _clock(), 4).run(reqs)
+    noop = ResilientFleetScheduler("least_work", DynamicPolicy(8),
+                                   _clock(), 4,
+                                   scale_schedule=[(0.0, 4)]).run(reqs)
+    assert np.array_equal(base.waits, noop.waits)
+    assert np.array_equal(base.replica_of, noop.replica_of)
+
+
+def test_explicit_down_spans():
+    reqs = _reqs()
+    horizon = reqs[-1].arrival
+    spans = [[], [], [(horizon * 0.2, horizon * 0.8)],
+             [(0.0, horizon * 0.5)]]
+    res = ResilientFleetScheduler("least_work", DynamicPolicy(8), _clock(),
+                                  4, down_spans=spans).run(reqs)
+    rep = res.resilience
+    assert rep.served + rep.shed + rep.failed == rep.arrived
+
+
+# ---------------------------------------------------------------------------
+# multi-seed regret sweep (slow — behind --runregret)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.regret
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_adaptive_beats_best_static_multi_seed(seed):
+    # the bench_autoscale operating point, swept over seeds
+    dist = LogNormalTokens(5.0, 0.8)
+    kw = dict(traffic=SinusoidTraffic(amplitude=0.9, period=2000.0),
+              num_requests=32_000, seed=seed, window=200.0,
+              max_replicas=8, replica_cost=5.0)
+    adaptive = run_controlled(
+        ElasticPolicy(), 8.0, dist, LAT,
+        controller_kwargs={"replica_target_util": 0.4}, **kw)
+    statics = [run_controlled(ElasticPolicy(), 8.0, dist, LAT,
+                              fixed=(R, rt), **kw).objective
+               for R in (1, 2, 4, 8)
+               for rt in ("round_robin", "least_work")]
+    assert adaptive.objective < min(statics), (seed, adaptive.objective,
+                                               min(statics))
+    clair = run_controlled(ElasticPolicy(), 8.0, dist, LAT,
+                           clairvoyant=True, **kw)
+    regret = adaptive.objective - clair.objective
+    assert np.isfinite(regret)
+    assert abs(regret) < min(statics)

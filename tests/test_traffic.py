@@ -1,0 +1,273 @@
+"""PR 8 conformance harness, traffic half: modulated arrival processes.
+
+Pins the three load-bearing invariants of ``repro.core.traffic``:
+
+1. **Stationary conformance** — every registered model at zero
+   modulation (and ``traffic=None``) reproduces the historical PR 5/6/7
+   trajectories BIT-exactly at every layer: ``make_request_stream``,
+   ``simulate_policy`` (oracle), ``simulate_policy_fast``,
+   ``route_oracle`` and ``simulate_fleet_fast``.
+2. **Cross-layer equality under modulation** — oracle and fastsim see
+   the same warped arrivals, so their trajectories stay equal under
+   every (traffic model x router x policy) cell.
+3. **Stream isolation** — the traffic PRNG lane never perturbs the
+   workload/predictor/fault streams: tokens are bit-equal between
+   stationary and modulated runs, and the warp itself is deterministic
+   in (model, seed).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.distributions import LogNormalTokens
+from repro.core.fastsim import simulate_fleet_fast, simulate_policy_fast
+from repro.core.fleet import route_oracle
+from repro.core.latency_model import BatchLatencyModel, LatencyModel
+from repro.core.policies import DynamicPolicy, ElasticPolicy, FCFSPolicy
+from repro.core.simulate import simulate_policy
+from repro.core.traffic import (MMPPTraffic, SinusoidTraffic,
+                                StationaryTraffic, TRAFFIC, TraceTraffic,
+                                TrafficModel, _traffic_rng, default_traffic,
+                                get_traffic, null_traffic, traffic_from_spec,
+                                warp_workload)
+from repro.data.pipeline import make_request_stream
+
+LN = LogNormalTokens(5.0, 0.6)
+LAT = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+SINGLE = LatencyModel(a=0.0205, c=0.55)
+
+
+# ---------------------------------------------------------------------------
+# registry / spec round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    for name in ("stationary", "sinusoid", "mmpp", "trace"):
+        assert name in TRAFFIC
+        tm = get_traffic(name)
+        assert isinstance(tm, TrafficModel)
+        assert tm.name == name
+
+
+def test_traffic_from_spec_forms():
+    assert isinstance(traffic_from_spec(None), StationaryTraffic)
+    assert isinstance(traffic_from_spec("sinusoid"), SinusoidTraffic)
+    tm = traffic_from_spec({"name": "sinusoid", "amplitude": 0.25,
+                            "period": 100.0})
+    assert tm.amplitude == 0.25 and tm.period == 100.0
+    inst = MMPPTraffic()
+    assert traffic_from_spec(inst) is inst
+    with pytest.raises(KeyError):
+        traffic_from_spec("no_such_model")
+
+
+def test_default_and_null_sets_cover_registry():
+    assert set(default_traffic()) == set(TRAFFIC)
+    nulls = null_traffic()
+    assert set(nulls) == set(TRAFFIC)
+    for name, tm in nulls.items():
+        assert tm.is_null, name
+
+
+# ---------------------------------------------------------------------------
+# 1: stationary conformance — bit-equality to the PR 5/6/7 paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRAFFIC))
+def test_null_models_pin_make_request_stream(name):
+    tm = null_traffic()[name]
+    base = make_request_stream(200, lam=3.0, dist=LN, vocab=256, seed=7)
+    mod = make_request_stream(200, lam=3.0, dist=LN, vocab=256, seed=7,
+                              traffic=tm)
+    for a, b in zip(base, mod):
+        assert a.arrival == b.arrival
+        assert a.target_output_tokens == b.target_output_tokens
+        assert np.array_equal(a.prompt_tokens, b.prompt_tokens)
+
+
+@pytest.mark.parametrize("name", sorted(TRAFFIC))
+def test_null_models_pin_simulators(name):
+    tm = null_traffic()[name]
+    pol = DynamicPolicy(8)
+    base_o = simulate_policy(pol, 2.0, LN, LAT, num_requests=400, seed=3)
+    null_o = simulate_policy(pol, 2.0, LN, LAT, num_requests=400, seed=3,
+                             traffic=tm)
+    assert np.array_equal(base_o["waits"], null_o["waits"])
+    base_f = simulate_policy_fast(pol, 2.0, LN, LAT, num_requests=400,
+                                  seed=3)
+    null_f = simulate_policy_fast(pol, 2.0, LN, LAT, num_requests=400,
+                                  seed=3, traffic=tm)
+    assert np.array_equal(base_f["waits"], null_f["waits"])
+
+
+@pytest.mark.parametrize("name", sorted(TRAFFIC))
+def test_null_models_pin_fleet(name):
+    tm = null_traffic()[name]
+    for router in ("least_work", "random"):
+        base = simulate_fleet_fast(router, DynamicPolicy(8), 3.0, 2, LN,
+                                   LAT, num_requests=400, seed=5)
+        null = simulate_fleet_fast(router, DynamicPolicy(8), 3.0, 2, LN,
+                                   LAT, num_requests=400, seed=5,
+                                   traffic=tm)
+        assert np.array_equal(base["replica_of"], null["replica_of"])
+        assert base["mean_wait"] == null["mean_wait"]
+
+
+def test_warp_workload_null_returns_same_object():
+    pol = DynamicPolicy(8)
+    wl = pol.sample_workload(2.0, LN, 300, seed=0)
+    for tm in null_traffic().values():
+        assert warp_workload(wl, tm, 0) is wl
+    assert warp_workload(wl, None, 0) is wl
+
+
+# ---------------------------------------------------------------------------
+# 2: oracle == fastsim under every (traffic x router x policy) cell
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRAFFIC))
+@pytest.mark.parametrize("pol", [FCFSPolicy(), DynamicPolicy(8),
+                                 ElasticPolicy()],
+                         ids=["fcfs", "dynamic", "elastic"])
+def test_oracle_equals_fastsim_single(name, pol):
+    tm = default_traffic()[name]
+    o = simulate_policy(pol, 2.0, LN, LAT, num_requests=400, seed=11,
+                        traffic=tm)
+    f = simulate_policy_fast(pol, 2.0, LN, LAT, num_requests=400, seed=11,
+                             traffic=tm)
+    np.testing.assert_allclose(o["waits"], f["waits"], rtol=0, atol=1e-9)
+
+
+@pytest.mark.parametrize("name", sorted(TRAFFIC))
+@pytest.mark.parametrize("router", ["round_robin", "least_work", "random"])
+def test_oracle_equals_fastsim_fleet(name, router):
+    tm = default_traffic()[name]
+    o = route_oracle(router, DynamicPolicy(8), 3.0, 2, LN, LAT,
+                     num_requests=400, seed=13, traffic=tm)
+    f = simulate_fleet_fast(router, DynamicPolicy(8), 3.0, 2, LN, LAT,
+                            num_requests=400, seed=13, traffic=tm)
+    assert np.array_equal(o["replica_of"], f["replica_of"])
+    np.testing.assert_allclose(o["mean_wait"], f["mean_wait"], atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# 3: warp correctness + stream isolation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRAFFIC))
+def test_warp_inverts_cumulative(name):
+    tm = default_traffic()[name]
+    rng = np.random.default_rng(0)
+    u = np.sort(rng.exponential(1.0, 500)).cumsum()
+    a = tm.warp(u, seed=4)
+    assert np.all(np.diff(a) > 0), "warp must preserve strict order"
+    back = tm.cumulative(a, seed=4)
+    np.testing.assert_allclose(back, u, rtol=1e-7, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", sorted(TRAFFIC))
+def test_warp_deterministic_in_seed(name):
+    tm = default_traffic()[name]
+    u = np.cumsum(np.random.default_rng(1).exponential(0.5, 300))
+    assert np.array_equal(tm.warp(u, seed=9), tm.warp(u, seed=9))
+
+
+def test_modulation_never_touches_token_stream():
+    base = make_request_stream(300, lam=3.0, dist=LN, vocab=256, seed=2)
+    mod = make_request_stream(300, lam=3.0, dist=LN, vocab=256, seed=2,
+                              traffic=SinusoidTraffic(amplitude=0.8,
+                                                      period=40.0))
+    arr_b = np.array([r.arrival for r in base])
+    arr_m = np.array([r.arrival for r in mod])
+    assert not np.array_equal(arr_b, arr_m), "modulation must move arrivals"
+    for a, b in zip(base, mod):
+        assert a.target_output_tokens == b.target_output_tokens
+        assert np.array_equal(a.prompt_tokens, b.prompt_tokens)
+
+
+def test_workload_tokens_survive_warp():
+    pol = DynamicPolicy(8)
+    wl = pol.sample_workload(2.0, LN, 300, seed=6)
+    warped = warp_workload(wl, MMPPTraffic(rates=(0.25, 4.0)), 6)
+    assert np.array_equal(wl.tokens, warped.tokens)
+    assert not np.array_equal(wl.arrivals, warped.arrivals)
+    np.testing.assert_allclose(np.cumsum(warped.inter), warped.arrivals)
+
+
+def test_traffic_rng_is_salted_lane():
+    # the traffic lane must be disjoint from the workload generator:
+    # same seed, different streams
+    a = _traffic_rng(0).random(8)
+    b = np.random.default_rng(0).random(8)
+    assert not np.array_equal(a, b)
+    assert np.array_equal(_traffic_rng(3, 5).random(4),
+                          _traffic_rng(3, 5).random(4))
+
+
+def test_mean_rate_normalized_to_one():
+    # long-run time-average of the multiplier is 1 for every model, so
+    # modulation preserves the offered load lam
+    t = np.linspace(0.0, 10_000.0, 200_001)
+    for name, tm in default_traffic().items():
+        m = tm.rate(t, seed=8)
+        assert abs(float(np.mean(m)) - 1.0) < 0.05, (name, float(np.mean(m)))
+
+
+def test_trace_period_mass_exact():
+    tm = TraceTraffic(times=(0.0, 30.0, 70.0), rates=(1.0, 3.0, 0.5),
+                      period=100.0)
+    # normalized multipliers integrate to exactly one period per period
+    assert abs(tm.cumulative(np.array([100.0]))[0] - 100.0) < 1e-9
+    assert abs(tm.cumulative(np.array([300.0]))[0] - 300.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis optional — the CI property job installs it;
+# tier-1 skips only this section, never the conformance tests above)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # container image ships without hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), amp=st.floats(0.1, 0.95),
+           period=st.floats(20.0, 500.0))
+    def test_sinusoid_counts_match_integrated_rate(seed, amp, period):
+        # N(T) is Poisson with mean lam * P(T): check within 5 sigma
+        lam, n = 4.0, 2_000
+        tm = SinusoidTraffic(amplitude=amp, period=period)
+        rng = np.random.default_rng(seed)
+        u = np.cumsum(rng.exponential(1.0 / lam, n))
+        a = tm.warp(u, seed=seed)
+        T = float(a[-1])
+        mean = lam * float(tm.cumulative(np.array([T]), seed=seed)[0])
+        assert abs(n - mean) < 5.0 * np.sqrt(max(mean, 1.0)) + 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_mmpp_counts_match_integrated_rate(seed):
+        lam, n = 4.0, 2_000
+        tm = MMPPTraffic(rates=(0.5, 2.5), mean_dwell=(80.0, 40.0))
+        rng = np.random.default_rng(seed)
+        u = np.cumsum(rng.exponential(1.0 / lam, n))
+        a = tm.warp(u, seed=seed)
+        T = float(a[-1])
+        mean = lam * float(tm.cumulative(np.array([T]), seed=seed)[0])
+        assert abs(n - mean) < 5.0 * np.sqrt(max(mean, 1.0)) + 1e-6
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), period=st.floats(10.0, 1000.0))
+    def test_zero_amplitude_is_identity(seed, period):
+        tm = SinusoidTraffic(amplitude=0.0, period=period)
+        u = np.cumsum(np.random.default_rng(seed).exponential(1.0, 200))
+        assert tm.is_null
+        assert np.array_equal(tm.warp(u, seed=seed), u)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (CI property job "
+                             "installs it)")
+    def test_property_suite_requires_hypothesis():
+        pass
