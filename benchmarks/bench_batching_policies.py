@@ -94,7 +94,10 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     Every registered fault model (docs/faults.md) runs the fault-injected
     fleet on both layers with closed accounting, and every registered
     traffic model (docs/traffic.md) runs both simulator layers with
-    oracle == fastsim equality and bit-exact stationary conformance."""
+    oracle == fastsim equality and bit-exact stationary conformance, and
+    every registered session model (docs/sessions.md) runs both layers
+    with oracle == fastsim equality and a bit-exact null (single-turn)
+    short-circuit."""
     from repro.core.distributions import UniformTokens
     from repro.core.fastsim import simulate_fleet_fast, simulate_policy_fast
     from repro.core.fleet import ROUTERS, default_routers
@@ -122,7 +125,7 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     docs = _load_check_docs()
     doc_errors = (docs.check_policy_docs() + docs.check_predictor_docs()
                   + docs.check_router_docs() + docs.check_fault_docs()
-                  + docs.check_traffic_docs())
+                  + docs.check_traffic_docs() + docs.check_session_docs())
     assert not doc_errors, doc_errors
     out = {}
     for name, pol in policies.items():
@@ -196,6 +199,34 @@ def registry_coverage(n_req: int = 4_000) -> dict:
                                     traffic=nulls[tname])
         assert np.array_equal(base["waits"], null["waits"]), tname
         out[f"traffic:{tname}"] = {"sim": fsim["mean_wait"]}
+    # every registered session model (docs/sessions.md) runs both
+    # simulator layers with oracle == fastsim trajectories, and its NULL
+    # (single-turn) instance must stay bit-equal to the session-free
+    # path — so a feedback law that stops running, diverges across
+    # layers, or breaks the null short-circuit fails the build
+    from repro.core.sessions import default_sessions, null_sessions
+    s_nulls = null_sessions()
+    n_sess = min(n_req, 500)
+    s_base = simulate_policy_fast(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                                  num_requests=n_sess, seed=3)
+    for sname, sm in default_sessions().items():
+        o = simulate_policy(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                            num_requests=n_sess, seed=3, sessions=sm)
+        fsim = simulate_policy_fast(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                                    num_requests=n_sess, seed=3,
+                                    sessions=sm)
+        np.testing.assert_allclose(o["waits"], fsim["waits"], atol=1e-9,
+                                   err_msg=sname)
+        null = simulate_policy_fast(DynamicPolicy(b_max=8), 0.4, uni, lat,
+                                    num_requests=n_sess, seed=3,
+                                    sessions=s_nulls[sname])
+        assert np.array_equal(s_base["waits"], null["waits"]), sname
+        # null models short-circuit to the session-free result shape
+        # (no "sessions" key) — that IS the conformance property
+        sess = fsim.get("sessions")
+        out[f"session:{sname}"] = {
+            "sim": fsim["mean_wait"],
+            "turns": n_sess if sess is None else sess["turns_arrived"]}
     return out
 
 

@@ -1,0 +1,130 @@
+"""PR 9: re-entrant agentic sessions — the affinity-vs-balancing trade.
+
+Three feedback questions:
+
+1. **Affinity vs load balancing**: under geometric feedback
+   (p=0.5, exponential think) a fleet routes every turn of a session
+   either to its home replica (``session_affinity`` — sticky hashing
+   that earns the ``prefix_discount`` γ on turns >= 2) or by backlog
+   (``least_work``) or blindly (``random``).  The benchmark runs the
+   {session_affinity, least_work, random} × γ ∈ {0, 0.5} grid,
+   multi-seed.  Acceptance (ISSUE 9): with prefix reuse ON,
+   ``session_affinity`` beats ``random`` end-to-end; with γ = 0 the
+   stickiness has nothing to earn and ``least_work`` wins — both sides
+   of the trade are recorded so a regression in either is visible.
+2. **Feedback load amplification**: mean wait of a single server as the
+   return probability p rises at fixed session rate λ — the simulated
+   counterpart of λ_eff = λ·E[turns] (docs/sessions.md; the analytic
+   band itself is validated in tests/test_sessions.py).
+3. **Null conformance timing**: the ``single`` (null) model must add no
+   measurable work — it short-circuits to the session-free path.
+
+Recorded as the ``pr9_sessions`` key of ``BENCH_simulators.json``
+(``emit_bench(..., key=...)`` — pr1..pr8 keys are never replaced).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):          # direct `python bench_....py` run
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, emit_bench, timer
+
+ROUTERS = ("session_affinity", "least_work", "random")
+
+
+def main(quick: bool = False):
+    from repro.core.distributions import LogNormalTokens
+    from repro.core.fastsim import simulate_fleet_fast, simulate_policy_fast
+    from repro.core.latency_model import BatchLatencyModel
+    from repro.core.policies import DynamicPolicy
+    from repro.core.sessions import GeometricSession
+
+    dist = LogNormalTokens(5.0, 0.6)
+    lat = BatchLatencyModel(k1=0.05, k2=0.5, k3=0.0005, k4=0.02)
+    pol = DynamicPolicy(b_max=8)
+    sessions = GeometricSession(p=0.5, think_mean=2.0)
+    lam, R = 1.5, 3
+    n_req, seeds = ((250, (5, 6, 7)) if quick
+                    else (500, (5, 6, 7, 8, 9)))
+
+    derived = {}
+    with timer() as t_all:
+        # ------ 1: router × prefix-discount grid, multi-seed ------
+        t0 = time.perf_counter()
+        grid = []
+        for gamma in (0.0, 0.5):
+            for router in ROUTERS:
+                waits, e2es = [], []
+                for seed in seeds:
+                    res = simulate_fleet_fast(
+                        router, pol, lam, R, dist, lat,
+                        num_requests=n_req, seed=seed, sessions=sessions,
+                        prefix_discount=gamma)
+                    waits.append(float(res["mean_wait"]))
+                    e2es.append(float(
+                        res["sessions"]["mean_session_e2e"]))
+                grid.append({"router": router, "prefix_discount": gamma,
+                             "mean_wait": float(np.mean(waits)),
+                             "mean_session_e2e": float(np.mean(e2es)),
+                             "per_seed_wait": waits})
+                derived[f"wait_{router}_g{gamma}"] = grid[-1]["mean_wait"]
+        t_grid = time.perf_counter() - t0
+        by = {(r["router"], r["prefix_discount"]): r for r in grid}
+        # acceptance (ISSUE 9): with reuse ON, stickiness beats blind
+        # routing end-to-end — on mean wait AND session e2e
+        aff, rnd = by[("session_affinity", 0.5)], by[("random", 0.5)]
+        assert aff["mean_wait"] < rnd["mean_wait"], (aff, rnd)
+        assert aff["mean_session_e2e"] < rnd["mean_session_e2e"], (aff, rnd)
+        # the other side of the trade: with nothing to earn (γ=0), blind
+        # stickiness must NOT beat backlog-aware balancing
+        assert (by[("least_work", 0.0)]["mean_wait"]
+                <= by[("session_affinity", 0.0)]["mean_wait"]), by
+        # reuse must pay for the sticky router itself
+        assert aff["mean_wait"] < by[("session_affinity", 0.0)][
+            "mean_wait"], by
+
+        # ------ 2: feedback load amplification on a single server ------
+        amp = []
+        for p in (0.0, 0.3, 0.5):
+            sm = GeometricSession(p=p, think_mean=2.0)
+            res = simulate_policy_fast(pol, 0.4, dist, lat,
+                                       num_requests=n_req, seed=3,
+                                       sessions=sm)
+            amp.append({"p": p, "mean_turns": sm.mean_turns(),
+                        "mean_wait": float(res["mean_wait"])})
+        # λ_eff = λ/(1−p) rises with p, so so must the simulated wait
+        assert (amp[0]["mean_wait"] < amp[1]["mean_wait"]
+                < amp[2]["mean_wait"]), amp
+        derived["amp_p0"] = amp[0]["mean_wait"]
+        derived["amp_p05"] = amp[2]["mean_wait"]
+
+        # ------ 3: null model short-circuits (bit-equal, ~free) ------
+        base = simulate_policy_fast(pol, 0.4, dist, lat,
+                                    num_requests=n_req, seed=3)
+        null = simulate_policy_fast(pol, 0.4, dist, lat,
+                                    num_requests=n_req, seed=3,
+                                    sessions=GeometricSession(p=0.0))
+        assert np.array_equal(base["waits"], null["waits"])
+
+    emit_bench("simulators", {
+        "workload": f"lognormal(5,0.6) lam={lam} R={R} dynamic(b_max=8); "
+                    f"geometric(p=0.5, think_mean=2.0); {n_req} sessions "
+                    f"x {len(seeds)} seeds",
+        "grid": grid,
+        "feedback_amplification": amp,
+        "grid_s": t_grid,
+    }, key="pr9_sessions")
+    emit("sessions_affinity", t_all.seconds, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("REPRO_BENCH_QUICK", "0") == "1")

@@ -17,7 +17,10 @@
 5. Fault coverage: every fault model in ``repro.core.faults``
    (``default_faults()``, i.e. the registry plus the null model) must be
    mentioned in docs/faults.md (backtick-quoted registry name).
-6. Performance page: docs/performance.md must exist and keep documenting
+6. Session coverage: every session (feedback) model in
+   ``repro.core.sessions`` must be mentioned in docs/sessions.md
+   (backtick-quoted registry name).
+7. Performance page: docs/performance.md must exist and keep documenting
    the PR 7 perf surface — the ``decode_attention_impl`` switch and its
    ModelConfig default, the ``compact_impl`` switch, ``shard_map``
    sweeps, and the ragged/dense kernel pair.
@@ -119,6 +122,14 @@ def check_traffic_docs() -> list:
                                 "traffic model")
 
 
+def check_session_docs() -> list:
+    _src_on_path()
+    from repro.core.sessions import SESSIONS
+    return _check_registry_docs(SESSIONS, os.path.join("docs",
+                                                       "sessions.md"),
+                                "session model")
+
+
 def check_performance_docs() -> list:
     """docs/performance.md must exist and mention the tunable perf
     surface by name, so a rename or removal cannot leave the page
@@ -140,13 +151,14 @@ def check_performance_docs() -> list:
 def main() -> int:
     errors = (check_links() + check_policy_docs() + check_predictor_docs()
               + check_router_docs() + check_fault_docs()
-              + check_traffic_docs() + check_performance_docs())
+              + check_traffic_docs() + check_session_docs()
+              + check_performance_docs())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         files = len(doc_files())
         print(f"check_docs: OK ({files} files, links + policy/predictor/"
-              f"router/fault/traffic coverage + performance page)")
+              f"router/fault/traffic/session coverage + performance page)")
     return 1 if errors else 0
 
 

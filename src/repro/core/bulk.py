@@ -497,3 +497,38 @@ def breakdown_wait(dist: TokenDistribution, lat, lam: float,
                wait=None if base is None
                else float(base / a + (1.0 - a) * r))
     return out
+
+
+# ----------------------------------------------------------------------------
+# Re-entrant sessions (beyond paper; M/G/1 with feedback)
+# ----------------------------------------------------------------------------
+
+def feedback_policy_delay(policy, lam: float, dist: TokenDistribution,
+                          lat, sessions) -> dict:
+    """Per-visit mean queueing delay of a batched policy under
+    re-entrant sessions (:mod:`repro.core.sessions`): a session of K
+    turns visits the queue K times, so the policy's own closed form is
+    evaluated at the effective arrival rate
+
+        λ_eff = λ · E[K]
+
+    with unchanged per-visit service moments — the same effective-λ
+    transfer as :func:`repro.core.mg1.mg1_feedback_wait`, lifted to any
+    policy with an ``analytic_delay`` (FCFS P-K, dynamic/elastic bulk
+    forms, multibin envelopes).  Exact when the superposed re-arrival
+    stream is Poisson; think-time delays decorrelate re-arrivals from
+    the queue state (Kleinrock independence), and the conformance suite
+    validates the band against multi-seed sim.  Returns ``{"wait",
+    "lam_eff", "mean_turns", "stable"}`` with ``wait=None`` when the
+    policy has no closed form (``analytic_kind=None``)."""
+    from repro.core.sessions import session_from_spec
+    model = session_from_spec(sessions)
+    mt = float(model.mean_turns())
+    lam_eff = lam * mt
+    wait = policy.analytic_delay(lam_eff, dist, lat)
+    return {
+        "wait": None if wait is None else float(wait),
+        "lam_eff": float(lam_eff),
+        "mean_turns": mt,
+        "stable": wait is not None and np.isfinite(wait),
+    }

@@ -105,7 +105,8 @@ def simulate_policy_fast(policy: BatchPolicy, lam: float,
                          dist: Optional[TokenDistribution], lat,
                          num_requests: int = 200_000, seed: int = 0,
                          workload=None, fault_trace=None,
-                         traffic=None) -> dict:
+                         traffic=None, sessions=None,
+                         prefix_discount: float = 0.0) -> dict:
     """Fast twin of :func:`repro.core.simulate.simulate_policy`: dispatch to
     the policy's compiled kernel, or fall back to the oracle when the
     policy has none (``fast_kernel=None``).
@@ -126,7 +127,26 @@ def simulate_policy_fast(policy: BatchPolicy, lam: float,
     twin's parameter: the HOST-side time-rescaling warp runs before the
     kernel sees the workload, so both layers simulate the identical
     modulated arrival instants; a null model never warps (the kernel
-    keeps its internal sampling path, bit-equal to PR 5/6/7)."""
+    keeps its internal sampling path, bit-equal to PR 5/6/7).
+
+    ``sessions`` re-enters completed turns exactly like the oracle
+    twin's parameter: the SAME feedback fixed point
+    (:func:`repro.core.sessions.simulate_policy_sessions`) runs with the
+    compiled kernels as the inner pass, so oracle ≡ fastsim under
+    feedback is structural; a null model takes this exact code path."""
+    if sessions is not None:
+        from repro.core.sessions import (session_from_spec,
+                                         simulate_policy_sessions)
+        model = session_from_spec(sessions)
+        if not model.is_null:
+            if workload is not None:
+                raise ValueError("sessions= expands its own workload; "
+                                 "pass lam/num_requests/seed instead of "
+                                 "workload=")
+            return simulate_policy_sessions(
+                policy, lam, dist, lat, num_requests, seed, model,
+                fault_trace=fault_trace, traffic=traffic,
+                prefix_discount=prefix_discount, fast=True)
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         lat = single_from_batch(lat)
     if traffic is not None:
@@ -948,15 +968,29 @@ def masked_backlog_route(arrivals, work, up, R: int) -> np.ndarray:
 def simulate_fleet_fast(router, policy: BatchPolicy, lam: float, R: int,
                         dist: Optional[TokenDistribution], lat,
                         num_requests: int = 100_000, seed: int = 0,
-                        traffic=None) -> dict:
+                        traffic=None, sessions=None,
+                        prefix_discount: float = 0.0) -> dict:
     """Fast twin of :func:`repro.core.fleet.route_oracle`: the router's
     split is identical (state-dependent assignment via the jitted backlog
     scan), and each replica's sub-workload runs through the policy's
     compiled single-server kernel (oracle fallback when it has none).
     ``traffic`` modulates the arrival stream before routing, exactly
-    like the oracle twin's parameter."""
+    like the oracle twin's parameter.  ``sessions`` /
+    ``prefix_discount`` re-enter completed turns through the fleet
+    feedback fixed point
+    (:func:`repro.core.sessions.simulate_fleet_sessions`) with the
+    kernels as the inner pass — same control flow as the oracle twin."""
     from repro.core.fleet import router_from_spec, run_fleet
     router = router_from_spec(router)
+    if sessions is not None:
+        from repro.core.sessions import (session_from_spec,
+                                         simulate_fleet_sessions)
+        model = session_from_spec(sessions)
+        if not model.is_null:
+            return simulate_fleet_sessions(
+                router, policy, lam, R, dist, lat, num_requests, seed,
+                model, prefix_discount=prefix_discount, traffic=traffic,
+                fast=True)
     fw = router.fleet_workload(policy, lam, dist, lat, num_requests, seed,
                                R, fast=True, traffic=traffic)
     return run_fleet(fw, policy, lat, dist,

@@ -428,19 +428,25 @@ def up_matrix(traces: List[ReplicaTrace], times: np.ndarray) -> np.ndarray:
 
 
 def masked_assign(router, arrivals, work, R: int, seed, up: np.ndarray,
-                  fast: bool = False) -> np.ndarray:
+                  fast: bool = False, sessions=None) -> np.ndarray:
     """Availability-aware replica assignment.  Backlog routers get the
     mask INSIDE the recursion (down replicas' virtual work is +inf in
     the argmin — the jitted ``lax.scan`` twin in fastsim carries the
-    same mask row per arrival); stateless routers assign as usual and
-    any request landing on a down replica is re-drawn uniformly among
-    the up ones from the fault-salted rng.  With every replica up both
-    paths reduce exactly to the PR 5 assignment."""
+    same mask row per arrival); routers that define their own
+    ``masked_assign`` (session affinity's sticky probing) keep their
+    law; other stateless routers assign as usual and any request landing
+    on a down replica is re-drawn uniformly among the up ones from the
+    fault-salted rng.  With every replica up all paths reduce exactly to
+    the PR 5 assignment."""
     from repro.core.fleet import router_from_spec
     router = router_from_spec(router)
     arrivals = np.asarray(arrivals, np.float64)
     work = np.asarray(work, np.float64)
     up = np.asarray(up, bool)
+    if hasattr(router, "masked_assign"):
+        return np.asarray(
+            router.masked_assign(arrivals, work, R, seed, up, fast=fast,
+                                 sessions=sessions), np.int64)
     if router.state_dependent:
         w = router._work_units(work)
         if fast:
@@ -448,7 +454,8 @@ def masked_assign(router, arrivals, work, R: int, seed, up: np.ndarray,
             return masked_backlog_route(arrivals, w, up, R)
         from repro.core.fleet import _masked_backlog_assign_np
         return _masked_backlog_assign_np(arrivals, w, R, up)
-    rep = np.asarray(router.assign(arrivals, work, R, seed, fast=fast),
+    rep = np.asarray(router.assign(arrivals, work, R, seed, fast=fast,
+                                   sessions=sessions),
                      np.int64)
     bad = np.nonzero(~up[np.arange(len(rep)), rep])[0]
     if len(bad):

@@ -135,7 +135,9 @@ def _sub_workload(wl: Workload, idx: np.ndarray) -> Workload:
         arrivals=arr,
         tokens=wl.tokens[idx],
         inter=np.diff(arr, prepend=0.0),
-        predicted=None if wl.predicted is None else wl.predicted[idx])
+        predicted=None if wl.predicted is None else wl.predicted[idx],
+        session=None if wl.session is None else wl.session[idx],
+        turn=None if wl.turn is None else wl.turn[idx])
 
 
 def served_slice(policy: BatchPolicy, wl: Workload) -> Workload:
@@ -148,7 +150,9 @@ def served_slice(policy: BatchPolicy, wl: Workload) -> Workload:
     return Workload(
         arrivals=wl.arrivals[:m], tokens=wl.tokens[:m],
         inter=None if wl.inter is None else wl.inter[:m],
-        predicted=None if wl.predicted is None else wl.predicted[:m])
+        predicted=None if wl.predicted is None else wl.predicted[:m],
+        session=None if wl.session is None else wl.session[:m],
+        turn=None if wl.turn is None else wl.turn[:m])
 
 
 # ----------------------------------------------------------------------------
@@ -186,6 +190,7 @@ def default_routers(d: int = 2) -> Dict[str, "RoutingPolicy"]:
         f"power_of_{d}": PowerOfDRouter(d=d),
         "jsq": JSQRouter(),
         "least_work": LeastWorkRouter(),
+        "session_affinity": SessionAffinityRouter(),
     }
 
 
@@ -241,10 +246,12 @@ class RoutingPolicy:
 
     # -------------------- assignment law --------------------
     def assign(self, arrivals: np.ndarray, work: np.ndarray, R: int,
-               seed, fast: bool = False) -> np.ndarray:
+               seed, fast: bool = False, sessions=None) -> np.ndarray:
         """Replica id per request.  Must depend only on (arrivals, work,
         R, seed) — never on downstream service state — so that routing
-        can be computed before any replica is simulated."""
+        can be computed before any replica is simulated.  ``sessions``
+        is the workload's session-id column (None on session-free
+        streams): sticky routers key on it, everything else ignores it."""
         raise NotImplementedError
 
     # -------------------- fleet workload --------------------
@@ -270,7 +277,8 @@ class RoutingPolicy:
             return FleetWorkload([wl], np.zeros(len(wl.arrivals), np.int64),
                                  wl.arrivals, 1)
         work = self.routing_work(wl, lat, seed)
-        rep = np.asarray(self.assign(wl.arrivals, work, R, seed, fast=fast),
+        rep = np.asarray(self.assign(wl.arrivals, work, R, seed, fast=fast,
+                                     sessions=wl.session),
                          np.int64)
         subs = [_sub_workload(wl, np.nonzero(rep == r)[0]) for r in range(R)]
         return FleetWorkload(subs, rep, wl.arrivals, R)
@@ -325,7 +333,8 @@ class _BacklogRouter(RoutingPolicy):
     def _work_units(self, work: np.ndarray) -> np.ndarray:
         return work
 
-    def assign(self, arrivals, work, R, seed, fast: bool = False):
+    def assign(self, arrivals, work, R, seed, fast: bool = False,
+               sessions=None):
         w = self._work_units(np.asarray(work, np.float64))
         if fast:
             from repro.core.fastsim import backlog_route
@@ -344,7 +353,8 @@ class RandomRouter(RoutingPolicy):
 
     name = "random"
 
-    def assign(self, arrivals, work, R, seed, fast: bool = False):
+    def assign(self, arrivals, work, R, seed, fast: bool = False,
+               sessions=None):
         return _route_rng(seed).integers(0, R, len(arrivals))
 
     def fleet_workload(self, policy, lam, dist, lat, num_requests, seed, R,
@@ -377,7 +387,8 @@ class RoundRobinRouter(RoutingPolicy):
 
     name = "round_robin"
 
-    def assign(self, arrivals, work, R, seed, fast: bool = False):
+    def assign(self, arrivals, work, R, seed, fast: bool = False,
+               sessions=None):
         return np.arange(len(arrivals), dtype=np.int64) % R
 
 
@@ -398,7 +409,8 @@ class PowerOfDRouter(RoutingPolicy):
         assert d >= 1
         self.d = int(d)
 
-    def assign(self, arrivals, work, R, seed, fast: bool = False):
+    def assign(self, arrivals, work, R, seed, fast: bool = False,
+               sessions=None):
         cands = _route_rng(seed).integers(0, R, (len(arrivals), self.d))
         counts = np.zeros(R, np.int64)
         out = np.empty(len(arrivals), np.int64)
@@ -445,6 +457,73 @@ class LeastWorkRouter(_BacklogRouter):
     name = "least_work"
 
 
+def _seed_fold(seed) -> int:
+    """Fold a scalar or tuple seed into one 64-bit salt word."""
+    parts = [int(k) for k in seed] if isinstance(seed, (tuple, list)) \
+        else [int(seed)]
+    acc = np.uint64(0x9E3779B97F4A7C15)
+    with np.errstate(over="ignore"):
+        for p in parts:
+            acc = (acc ^ np.uint64(p & 0xFFFFFFFFFFFFFFFF)) \
+                * np.uint64(0xBF58476D1CE4E5B9)
+    return int(acc)
+
+
+def _affinity_hash(keys: np.ndarray, seed) -> np.ndarray:
+    """splitmix64-style avalanche of per-request sticky keys (vectorized,
+    deterministic, layer-independent — no rng stream is consumed)."""
+    z = keys.astype(np.uint64)
+    with np.errstate(over="ignore"):
+        z = z + np.uint64(_seed_fold(seed))
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+    return z
+
+
+@register_router
+class SessionAffinityRouter(RoutingPolicy):
+    """Sticky hashing: replica = hash(session id) mod R, so every turn of
+    a session lands on the same replica and its KV/prefix cache — the
+    affinity side of the affinity-vs-``least_work`` trade-off
+    (prefix reuse shrinks service; blind stickiness forgoes load
+    balancing).  On session-free streams (``sessions=None``) each
+    request is its own session — the hash of the request index, an iid
+    uniform split in law.  Assignment depends only on (session id, seed):
+    deterministic, identical on the oracle and fast layers, and STABLE
+    across the feedback fixed point's re-sorted passes (arrival times
+    never enter the hash).  Dead replicas fall back through the PR 6
+    masking: :meth:`masked_assign` probes ``hash + k`` until an
+    up replica is found, so only turns whose home replica is down move."""
+
+    name = "session_affinity"
+
+    def assign(self, arrivals, work, R, seed, fast: bool = False,
+               sessions=None):
+        keys = np.arange(len(arrivals), dtype=np.uint64) \
+            if sessions is None else np.asarray(sessions, np.uint64)
+        return (_affinity_hash(keys, seed) % np.uint64(R)).astype(np.int64)
+
+    def masked_assign(self, arrivals, work, R, seed, up, fast: bool = False,
+                      sessions=None):
+        """Availability-masked stickiness (hook consumed by
+        :func:`repro.core.faults.masked_assign`): linear probing from the
+        home replica, so sessions keep their home whenever it is up and
+        deterministically overflow to ``home + k`` while it is down."""
+        rep = np.asarray(self.assign(arrivals, work, R, seed, fast=fast,
+                                     sessions=sessions), np.int64)
+        up = np.asarray(up, bool)
+        offs = np.zeros(len(rep), np.int64)
+        rows = np.arange(len(rep))
+        for _ in range(R):
+            cur = (rep + offs) % R
+            bad = ~up[rows, cur]
+            if not bad.any():
+                break
+            offs[bad] += 1
+        return (rep + offs) % R
+
+
 # ----------------------------------------------------------------------------
 # Layer 1: the NumPy reference oracle (reuses the single-server event loops)
 # ----------------------------------------------------------------------------
@@ -487,13 +566,27 @@ def run_fleet(fw: FleetWorkload, policy: BatchPolicy, lat,
 def route_oracle(router, policy: BatchPolicy, lam: float, R: int,
                  dist: Optional[TokenDistribution], lat,
                  num_requests: int = 100_000, seed: int = 0,
-                 traffic=None) -> dict:
+                 traffic=None, sessions=None,
+                 prefix_discount: float = 0.0) -> dict:
     """Fleet reference oracle: route, then reuse the single-server
     reference event loops (``repro.core.simulate``) per replica,
     unchanged.  ``router``: a RoutingPolicy, registry name, or spec.
-    ``traffic`` modulates the arrival stream before routing."""
+    ``traffic`` modulates the arrival stream before routing.
+    ``sessions`` / ``prefix_discount`` re-enter completed turns through
+    the fleet feedback fixed point
+    (:func:`repro.core.sessions.simulate_fleet_sessions`); a null model
+    takes this exact code path (bit-equality by construction)."""
     from repro.core.simulate import simulate_policy
     router = router_from_spec(router)
+    if sessions is not None:
+        from repro.core.sessions import (session_from_spec,
+                                         simulate_fleet_sessions)
+        model = session_from_spec(sessions)
+        if not model.is_null:
+            return simulate_fleet_sessions(
+                router, policy, lam, R, dist, lat, num_requests, seed,
+                model, prefix_discount=prefix_discount, traffic=traffic,
+                fast=False)
     fw = router.fleet_workload(policy, lam, dist, lat, num_requests, seed, R,
                                traffic=traffic)
     return run_fleet(fw, policy, lat, dist,
@@ -639,6 +732,7 @@ def recommend_replicas(lam: float, dist: TokenDistribution,
 __all__ = [
     "FleetWorkload", "JSQRouter", "LeastWorkRouter", "PowerOfDRouter",
     "ROUTERS", "RandomRouter", "RoundRobinRouter", "RoutingPolicy",
+    "SessionAffinityRouter",
     "default_routers", "erlang_c", "fleet_analytic_delay",
     "fleet_analytic_kind", "get_router", "mgr_whitt_wait",
     "recommend_replicas", "register_router", "route_oracle",

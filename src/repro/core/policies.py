@@ -80,6 +80,10 @@ class Workload:
     tokens: np.ndarray            # float64 output-token counts (clipped)
     inter: Optional[np.ndarray] = None   # inter-arrival times (FCFS oracle)
     predicted: Optional[np.ndarray] = None   # predictor output (float64)
+    # Re-entrant sessions (repro.core.sessions): session id and 1-based
+    # turn index per row; None on session-free streams (the PR 8 paths).
+    session: Optional[np.ndarray] = None
+    turn: Optional[np.ndarray] = None
 
     @property
     def predicted_or_true(self) -> np.ndarray:

@@ -86,7 +86,8 @@ def simulate_policy(policy: BatchPolicy, lam: float,
                     dist: Optional[TokenDistribution], lat,
                     num_requests: int = 200_000, seed: int = 0,
                     workload: Optional[Workload] = None,
-                    fault_trace=None, traffic=None) -> dict:
+                    fault_trace=None, traffic=None, sessions=None,
+                    prefix_discount: float = 0.0) -> dict:
     """Run ``policy`` through its reference event loop.  ``lat`` is the
     policy's latency law (``LatencyModel`` for single-service policies,
     ``BatchLatencyModel`` otherwise — a batch law handed to a
@@ -109,7 +110,27 @@ def simulate_policy(policy: BatchPolicy, lam: float,
     ``traffic`` (a :mod:`repro.core.traffic` model, name or spec)
     modulates the arrival rate by warping the sampled arrivals through
     the model's time-rescaling transform; a null model leaves the
-    trajectory bit-identical (the warp is never applied)."""
+    trajectory bit-identical (the warp is never applied).
+
+    ``sessions`` (a :mod:`repro.core.sessions` model, name or spec)
+    makes requests RE-ENTER: completed turns re-arrive at ``completion +
+    think`` via the feedback fixed point in
+    :func:`repro.core.sessions.simulate_policy_sessions`.  A null model
+    (``single`` / zero feedback) takes this exact code path — bit
+    equality by construction."""
+    if sessions is not None:
+        from repro.core.sessions import (session_from_spec,
+                                         simulate_policy_sessions)
+        model = session_from_spec(sessions)
+        if not model.is_null:
+            if workload is not None:
+                raise ValueError("sessions= expands its own workload; "
+                                 "pass lam/num_requests/seed instead of "
+                                 "workload=")
+            return simulate_policy_sessions(
+                policy, lam, dist, lat, num_requests, seed, model,
+                fault_trace=fault_trace, traffic=traffic,
+                prefix_discount=prefix_discount, fast=False)
     if policy.uses_single_latency and isinstance(lat, BatchLatencyModel):
         from repro.core.policies import single_from_batch
         lat = single_from_batch(lat)

@@ -83,6 +83,11 @@ class Request:
     start_time: float = -1.0
     finish_time: float = -1.0
     generated: int = 0
+    # re-entrant sessions (repro.core.sessions): -1/1/0.0 on
+    # session-free streams (the historical defaults)
+    session: int = -1                # session id (-1: not part of one)
+    turn: int = 1                    # 1-based turn index within the session
+    think: float = 0.0               # delay after the previous turn's finish
 
     @property
     def queue_wait(self) -> float:
@@ -104,7 +109,7 @@ def correlated_prompt_len(out_tokens: float, corr: float,
 def make_request_stream(num: int, lam: float, dist: TokenDistribution,
                         vocab: int, prompt_len_range=(8, 64),
                         seed: int = 0, prompt_len_corr: float = 0.0,
-                        traffic=None):
+                        traffic=None, sessions=None):
     """Poisson arrivals + iid output-token requirements (the paper's model).
 
     ``prompt_len_corr=0`` (default) keeps prompt lengths independent of
@@ -119,7 +124,17 @@ def make_request_stream(num: int, lam: float, dist: TokenDistribution,
     model's time-rescaling warp — tokens and prompts are bit-identical
     with modulation on or off, and a null model (``None``, or any
     registered model at zero modulation) leaves the arrivals themselves
-    bit-identical too."""
+    bit-identical too.
+
+    ``sessions`` (a :mod:`repro.core.sessions` model, registry name or
+    spec) expands the ``num`` base requests into multi-turn sessions:
+    the base stream above is drawn FIRST in the exact historical rng
+    call order (turn-1 rows reuse it verbatim), then turns >= 2 draw
+    their lengths/prompts from the salted session lanes — a null model
+    (``None``, ``single``, or zero feedback) returns the identical
+    session-free list.  Expanded arrivals are the lower bound ``base +
+    cumulative think``; a session-aware driver re-enqueues each turn at
+    its predecessor's finish + ``think``."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / lam, num))
     if traffic is not None:
@@ -137,4 +152,39 @@ def make_request_stream(num: int, lam: float, dist: TokenDistribution,
             prompt_tokens=rng.integers(0, vocab, plen).astype(np.int32),
             target_output_tokens=int(max(outs[i], 1)),
         ))
-    return reqs
+    if sessions is None:
+        return reqs
+    from repro.core.sessions import (_PROMPT_LANE, _TOKENS_LANE,
+                                     _session_rng, plan_sessions,
+                                     session_from_spec)
+    model = session_from_spec(sessions)
+    if model.is_null:
+        return reqs
+    plan = plan_sessions(model, num, seed)
+    trng = _session_rng(seed, _TOKENS_LANE)
+    prng = _session_rng(seed, _PROMPT_LANE)
+    extra_outs = dist.sample(trng, int((plan.turn >= 2).sum()))
+    cs = np.cumsum(plan.think)
+    out_reqs, j = [], 0
+    for s in range(num):
+        base = reqs[s]
+        for t in range(int(plan.turns[s])):
+            row = int(plan.offsets[s]) + t
+            if t == 0:
+                req = dataclasses.replace(
+                    base, rid=row, session=s, turn=1, think=0.0)
+            else:
+                plen = int(prng.integers(*prompt_len_range))
+                req = Request(
+                    rid=row,
+                    arrival=float(base.arrival + cs[row]
+                                  - cs[plan.offsets[s]]),
+                    prompt_tokens=prng.integers(0, vocab, plen)
+                    .astype(np.int32),
+                    target_output_tokens=int(max(extra_outs[j], 1)),
+                    session=s, turn=t + 1,
+                    think=float(plan.think[row]),
+                )
+                j += 1
+            out_reqs.append(req)
+    return out_reqs

@@ -36,4 +36,19 @@ def summarize(result, warmup_frac: float = 0.1) -> dict:
             "kill_events": len(rep.kill_events),
             "availability": [float(a) for a in rep.availability],
         })
+    sess = getattr(result, "sessions", None)
+    if sess is not None:
+        # re-entrant session accounting (repro.core.sessions): per-turn
+        # conservation arrived == served + lost, and per-session
+        # end-to-end latency (first-turn arrival -> last-turn completion)
+        out.update({
+            "n_sessions": int(sess["n_sessions"]),
+            "turns_arrived": int(sess["turns_arrived"]),
+            "turns_served": int(sess["turns_served"]),
+            "turns_lost": int(sess["turns_lost"]),
+            "turns_cancelled": int(sess["turns_cancelled"]),
+            "sessions_completed": int(sess["sessions_completed"]),
+            "mean_session_e2e": float(sess["mean_session_e2e"]),
+            "p95_session_e2e": float(sess["p95_session_e2e"]),
+        })
     return out

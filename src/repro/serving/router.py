@@ -53,6 +53,9 @@ class FleetScheduleResult:
     makespan: float              # latest replica makespan
     replica_of: np.ndarray
     per_replica: List[ScheduleResult]
+    # per-session accounting (repro.core.sessions); None on
+    # session-free runs — the historical result shape
+    sessions: Optional[dict] = None
 
 
 def _fleet_predictions(policy, predictor, predict_seed: int,
@@ -63,9 +66,14 @@ def _fleet_predictions(policy, predictor, predict_seed: int,
     column."""
     predicted = _request_predictions(policy, predictor, predict_seed, ns,
                                      reqs)
+    sess = np.array([r.session for r in reqs], np.int64)
+    has_sessions = bool(len(sess)) and bool((sess >= 0).any())
     return predicted, Workload(
         arrivals=np.array([r.arrival for r in reqs]),
-        tokens=ns, predicted=predicted)
+        tokens=ns, predicted=predicted,
+        session=sess if has_sessions else None,
+        turn=(np.array([r.turn for r in reqs], np.int64)
+              if has_sessions else None))
 
 
 def _merge_replicas(reqs, rep, per, n_total) -> FleetScheduleResult:
@@ -102,7 +110,8 @@ def _route_and_dispatch(router, policy: BatchPolicy, reqs: List[Request],
                                        ns, reqs)
     work = router.routing_work(wl, work_lat, predict_seed,
                                prompts=[r.prompt_tokens for r in reqs])
-    rep = np.asarray(router.assign(wl.arrivals, work, R, predict_seed),
+    rep = np.asarray(router.assign(wl.arrivals, work, R, predict_seed,
+                                   sessions=wl.session),
                      np.int64)
     per: List[Optional[ScheduleResult]] = []
     for r in range(R):
@@ -163,6 +172,148 @@ class FleetScheduler:
                                    getattr(self.clock, "single", None),
                                    self.predictor, self.predict_seed,
                                    self.R, runner)
+
+    def run_sessions(self, reqs: List[Request],
+                     prefix_discount: float = 0.0) -> FleetScheduleResult:
+        """Session-aware fleet timeline: the feedback fixed point of
+        :mod:`repro.core.sessions` with a routing pass per iteration —
+        turn t+1 re-enters the GLOBAL queue at turn t's completion +
+        ``think`` and is re-routed (sticky routers key on the session
+        column).  ``prefix_discount`` γ: a turn >= 2 landing on its
+        parent's replica finds the session's KV there and serves
+        ``tokens·(1−γ)``; on any other replica the prefix is cold and
+        the full length is served — the affinity-vs-``least_work``
+        trade-off, measured end-to-end.  A stream with no multi-turn
+        rows takes the plain :meth:`run` path (bit-equal to PR 5/6).
+        The resilience path is not composed with sessions."""
+        if all(r.turn <= 1 for r in reqs):
+            return self.run(reqs)
+        if self.faults is not None or self.fault_kw:
+            raise ValueError("sessions are not composed with the serving "
+                             "resilience path; construct the "
+                             "FleetScheduler without faults/knobs")
+        from repro.core.sessions import (
+            _MAX_PASSES, _TOL, _cascade_cancel, _session_summary,
+            check_policy_supports_sessions, plan_from_requests)
+        pol = self.policy
+        check_policy_supports_sessions(pol)
+        router = self.router
+        m = len(reqs)
+        turn = np.array([r.turn for r in reqs], np.int64)
+        plan, order_sm, lb = plan_from_requests(reqs)
+        ns_full = np.array([pol.clip(r.target_output_tokens) for r in reqs],
+                           np.float64)
+        predicted, _ = _fleet_predictions(pol, self.predictor,
+                                          self.predict_seed, ns_full, reqs)
+        prompts = [r.prompt_tokens for r in reqs]
+        tok_true = np.array([r.target_output_tokens for r in reqs],
+                            np.int64)
+        disc_tok = tok_true.copy()
+        if prefix_discount > 0.0:
+            later = turn > 1
+            disc_tok[later] = np.maximum(
+                1, np.round(tok_true[later]
+                            * (1.0 - prefix_discount)).astype(np.int64))
+        arr = lb.copy()
+        child = np.nonzero(plan.parent >= 0)[0]
+        cancelled = np.zeros(m, bool)
+        lost = np.zeros(m, bool)
+        rep_row = np.full(m, -1, np.int64)
+        ids = np.arange(m)
+        w_row = np.zeros(m)
+        e2e_row = np.zeros(m)
+        comp = np.full(m, np.inf)
+        per: List[Optional[ScheduleResult]] = []
+        sizes: List[int] = []
+        makespan = 0.0
+        canc_pass = cancelled
+        seen_states = set()
+        for _ in range(_MAX_PASSES):
+            canc_pass = cancelled   # the set that defines this pass's ids
+            active = np.nonzero(~cancelled)[0]
+            ids = active[np.lexsort((active, arr[active]))]
+            ridx = order_sm[ids]
+            wl = Workload(
+                arrivals=arr[ids], tokens=ns_full[ridx],
+                predicted=None if predicted is None else predicted[ridx],
+                session=plan.session[ids], turn=plan.turn[ids])
+            work = router.routing_work(wl, getattr(self.clock, "single",
+                                                   None),
+                                       self.predict_seed,
+                                       prompts=[prompts[i] for i in ridx])
+            rep_s = np.asarray(router.assign(wl.arrivals, work, self.R,
+                                             self.predict_seed,
+                                             sessions=wl.session), np.int64)
+            new_rep = np.full(m, -1, np.int64)
+            new_rep[ids] = rep_s
+            sticky = np.zeros(m, bool)
+            sticky[child] = (new_rep[child] >= 0) & \
+                (new_rep[child] == new_rep[plan.parent[child]])
+            comp = np.full(m, np.inf)
+            w_row = np.zeros(m)
+            e2e_row = np.zeros(m)
+            lost_row = np.zeros(m, bool)
+            per = []
+            sizes = []
+            makespan = 0.0
+            for r in range(self.R):
+                mask = rep_s == r
+                sub_p = ids[mask]
+                if not len(sub_p):
+                    per.append(None)
+                    continue
+                sub_r = order_sm[sub_p]
+                sub_reqs = [dataclasses.replace(
+                    reqs[i], arrival=float(arr[p]),
+                    target_output_tokens=int(
+                        disc_tok[i] if sticky[p] else tok_true[i]))
+                    for p, i in zip(sub_p, sub_r)]
+                res = PolicyScheduler(
+                    pol, self.clock,
+                    predict_seed=self.predict_seed).run(
+                    sub_reqs, predicted=(None if predicted is None
+                                         else predicted[sub_r]))
+                per.append(res)
+                srv = ~res.lost
+                comp[sub_p[srv]] = arr[sub_p[srv]] + res.e2e[srv]
+                w_row[sub_p] = res.waits
+                e2e_row[sub_p] = res.e2e
+                lost_row[sub_p] = res.lost
+                sizes += list(res.batch_sizes)
+                makespan = max(makespan, res.makespan)
+            new_cancelled = _cascade_cancel(plan, lost_row)
+            new_arr = arr.copy()
+            new_arr[child] = comp[plan.parent[child]] + plan.think[child]
+            unresolved = child[~np.isfinite(new_arr[child])]
+            new_arr[unresolved] = lb[unresolved]
+            new_arr[new_cancelled] = lb[new_cancelled]
+            live = child[~new_cancelled[child]]
+            delta = float(np.max(np.abs(new_arr[live] - arr[live]))) \
+                if len(live) else 0.0
+            stable = (np.array_equal(new_cancelled, cancelled)
+                      and np.array_equal(lost_row, lost)
+                      and np.array_equal(new_rep, rep_row))
+            arr, cancelled, lost, rep_row = (new_arr, new_cancelled,
+                                             lost_row, new_rep)
+            if stable and delta <= _TOL:
+                break
+            if not stable:
+                # shedding can cycle the lost/cancel sets (no fixed
+                # point); a repeated set state never converges
+                state = (new_cancelled.tobytes(), lost_row.tobytes(),
+                         new_rep.tobytes())
+                if state in seen_states:
+                    break
+                seen_states.add(state)
+        # report the last SIMULATED pass's cancel set: identical on a
+        # converged break, self-consistent on pass exhaustion (shedding
+        # can cycle — see repro.core.sessions._tau_event_loop)
+        cancelled = canc_pass
+        return FleetScheduleResult(
+            w_row[ids], e2e_row[ids], lost[ids], sizes, makespan,
+            rep_row[ids], per,
+            sessions=_session_summary(plan, arr, w_row, comp, cancelled,
+                                      lost))
 
 
 def run_fleet_schedule(router, policy: BatchPolicy,

@@ -61,7 +61,7 @@ PAIR_POLICIES = {
 
 def test_registry_covers_all_routers():
     assert {"random", "round_robin", "power_of_d", "jsq",
-            "least_work"} == set(ROUTERS)
+            "least_work", "session_affinity"} == set(ROUTERS)
     assert set(ROUTERS) == {type(r).name for r in ROUTER_SET.values()}
 
 
