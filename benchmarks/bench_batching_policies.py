@@ -97,7 +97,11 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     oracle == fastsim equality and bit-exact stationary conformance, and
     every registered session model (docs/sessions.md) runs both layers
     with oracle == fastsim equality and a bit-exact null (single-turn)
-    short-circuit."""
+    short-circuit.  Every registered batch-formation policy
+    (docs/memory.md) additionally runs memory-gated (KV budget) on both
+    layers with oracle == fastsim equality and a bit-exact null
+    (infinite-budget) short-circuit, and the non-batch disciplines must
+    keep REFUSING a budget (``check_policy_supports_memory``)."""
     from repro.core.distributions import UniformTokens
     from repro.core.fastsim import simulate_fleet_fast, simulate_policy_fast
     from repro.core.fleet import ROUTERS, default_routers
@@ -125,7 +129,8 @@ def registry_coverage(n_req: int = 4_000) -> dict:
     docs = _load_check_docs()
     doc_errors = (docs.check_policy_docs() + docs.check_predictor_docs()
                   + docs.check_router_docs() + docs.check_fault_docs()
-                  + docs.check_traffic_docs() + docs.check_session_docs())
+                  + docs.check_traffic_docs() + docs.check_session_docs()
+                  + docs.check_memory_docs())
     assert not doc_errors, doc_errors
     out = {}
     for name, pol in policies.items():
@@ -227,6 +232,42 @@ def registry_coverage(n_req: int = 4_000) -> dict:
         out[f"session:{sname}"] = {
             "sim": fsim["mean_wait"],
             "turns": n_sess if sess is None else sess["turns_arrived"]}
+    # every registered batch-formation policy runs memory-gated (KV
+    # budget, docs/memory.md) on both layers with oracle == fastsim
+    # trajectories and a bit-exact infinite-budget short-circuit; the
+    # non-batch disciplines must keep refusing a budget — so a policy
+    # whose tandem admission breaks (or silently starts accepting a
+    # budget it cannot honor) fails the build
+    n_mem = min(n_req, 500)
+    M = 4000.25
+    for name, pol in policies.items():
+        if pol.oracle_kind != "batches":
+            try:
+                simulate_policy_fast(pol, 0.2, uni, lat,
+                                     num_requests=n_mem, seed=3, memory=M)
+            except ValueError:
+                out[f"memory:{name}"] = {"supported": False}
+                continue
+            raise AssertionError(f"{name} accepted a memory budget but "
+                                 f"has no batch admission point")
+        o = simulate_policy(pol, 0.2, uni, lat, num_requests=n_mem,
+                            seed=3, memory=M)
+        fsim = simulate_policy_fast(pol, 0.2, uni, lat, num_requests=n_mem,
+                                    seed=3, memory=M)
+        np.testing.assert_allclose(o["waits"], fsim["waits"], rtol=1e-6,
+                                   atol=1e-9, err_msg=name)
+        assert o["memory"]["blocked_batches"] == fsim["memory"][
+            "blocked_batches"], name
+        assert fsim["memory"]["kv_peak"] <= M, name
+        m_base = simulate_policy_fast(pol, 0.2, uni, lat,
+                                      num_requests=n_mem, seed=3)
+        m_null = simulate_policy_fast(pol, 0.2, uni, lat,
+                                      num_requests=n_mem, seed=3,
+                                      memory=np.inf)
+        assert np.array_equal(m_base["waits"], m_null["waits"]), name
+        out[f"memory:{name}"] = {"supported": True,
+                                 "sim": fsim["mean_wait"],
+                                 "kv_peak": float(fsim["memory"]["kv_peak"])}
     return out
 
 

@@ -137,6 +137,21 @@ def main(quick: bool = False):
         derived["serving_p99_wait"] = tail["p99_wait"]
         derived["serving_retries"] = tail["retries"]
 
+        # ------ 5: per-replica KV budgets across the fleet ------
+        # each replica owns its HBM (docs/memory.md): the aggregate rolls
+        # up the max peak / summed blocking across replicas, and the
+        # occupancy ledger must close at drain
+        M_fleet = 4000.25
+        mem_res = simulate_fleet_fast(
+            "round_robin", DynamicPolicy(None), 0.2, 2, uni, lat,
+            num_requests=min(n_req, 6_000), seed=seed, memory=M_fleet)
+        fleet_mem = mem_res["memory"]
+        assert fleet_mem["capacity"] == M_fleet
+        assert fleet_mem["kv_peak"] <= M_fleet
+        assert fleet_mem["allocated"] == fleet_mem["freed"]
+        derived["fleet_kv_peak"] = float(fleet_mem["kv_peak"])
+        derived["fleet_blocked_batches"] = int(fleet_mem["blocked_batches"])
+
     emit_bench("simulators", {
         "workload": f"scaling: uniform(0,1000) lam={lam_tot} over R={R_grid}"
                     f"; routers: lognormal(7,0.7) heavy tail lam={lam_ht} "
@@ -150,6 +165,9 @@ def main(quick: bool = False):
         "least_work_noise": {"sigmas": sigmas,
                              "mean_wait": [float(v) for v in noise_w]},
         "serving_tail": serving_tail,
+        "fleet_memory": {"capacity": M_fleet,
+                         **{k: float(v) for k, v in fleet_mem.items()
+                            if k != "capacity"}},
         "sweep_s": t_sweep,
     }, key="pr5_fleet")
     emit("fleet_routing", t_all.seconds, derived)

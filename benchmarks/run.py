@@ -36,7 +36,7 @@ def main() -> None:
         bench_latency_model, bench_batch_scaling, bench_order_stats,
         bench_clipping, bench_batching_policies, bench_fixed_batching,
         bench_predictors, bench_fleet, bench_faults, bench_engine_e2e,
-        bench_scale, bench_autoscale, bench_sessions)
+        bench_scale, bench_autoscale, bench_sessions, bench_memory)
 
     print("name,us_per_call,derived")
     steps = [
@@ -53,6 +53,7 @@ def main() -> None:
         bench_scale.main,               # sharded sweeps + fused serving
         bench_autoscale.main,           # non-stationary traffic + control
         bench_sessions.main,            # re-entrant sessions / affinity
+        bench_memory.main,              # KV budget / prefill-decode tandem
     ]
     for step in steps:
         _retry(lambda s=step: s(quick), quick)

@@ -130,6 +130,31 @@ def check_session_docs() -> list:
                                 "session model")
 
 
+def check_memory_docs() -> list:
+    """docs/memory.md must exist and keep documenting the PR 10 memory
+    surface by name — the budget model, the tandem clock/oracle, the
+    per-layer knobs and the analytic arm — so a rename cannot leave the
+    page describing an API that no longer exists."""
+    _src_on_path()
+    import repro.core.memory as mem
+    path = os.path.join(ROOT, "docs", "memory.md")
+    if not os.path.exists(path):
+        return ["docs/memory.md is missing"]
+    with open(path) as f:
+        text = f.read()
+    required = [f"`{name}`" for name in mem.__all__]
+    required += ["`memory=`", "`kv_budget`", "`tandem_bound`",
+                 "`stage_split`", "`memory_budget`", "`kv_peak`",
+                 "`blocked_batches`", "`deferred_requests`"]
+    errors = [f"docs/memory.md: {tok} is not documented"
+              for tok in required if tok not in text]
+    # the public surface itself must not silently shrink
+    for name in ("MemoryBudget", "TandemClock", "tandem_oracle"):
+        if not hasattr(mem, name):
+            errors.append(f"repro.core.memory lost `{name}`")
+    return errors
+
+
 def check_performance_docs() -> list:
     """docs/performance.md must exist and mention the tunable perf
     surface by name, so a rename or removal cannot leave the page
@@ -152,13 +177,14 @@ def main() -> int:
     errors = (check_links() + check_policy_docs() + check_predictor_docs()
               + check_router_docs() + check_fault_docs()
               + check_traffic_docs() + check_session_docs()
-              + check_performance_docs())
+              + check_memory_docs() + check_performance_docs())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         files = len(doc_files())
         print(f"check_docs: OK ({files} files, links + policy/predictor/"
-              f"router/fault/traffic/session coverage + performance page)")
+              f"router/fault/traffic/session coverage + memory page + "
+              f"performance page)")
     return 1 if errors else 0
 
 

@@ -440,6 +440,155 @@ def optimize_bin_edges(dist: TokenDistribution, lat: BatchLatencyModel,
 
 
 # ----------------------------------------------------------------------------
+# SRPT-like shortest-predicted-first batching: size-interval envelope
+# ----------------------------------------------------------------------------
+
+def srpt_bound(dist: TokenDistribution, lat: BatchLatencyModel, lam: float,
+               b_max: Optional[int], num_classes: int = 8) -> dict:
+    """Mean-delay envelope for capped shortest-predicted-first batching
+    (:class:`~repro.core.policies.SRPTPolicy` under oracle ordering), via
+    the size-interval decomposition classic SRPT analysis uses
+    (Harchol-Balter), adapted to batched non-preemptive service:
+
+    * **Class arm.**  Split the token support into ``num_classes``
+      equal-mass classes with upper edges ``e_1 < ... < e_J``.  While a
+      class-j request waits, shortest-first formation only starts batches
+      of shorter-or-equal requests, so its backlog is the system restricted
+      to classes <= j: Poisson ``lam_j = lam * F(e_j)`` with every member
+      padded to ``e_j``.  With the cap ``b``, clearing a backlogged room
+      amortizes the per-batch overhead over at most ``b`` members, so the
+      per-request envelope is ``alpha'_j = k1 + k3 e_j + (k2 + k4 e_j)/b``
+      with per-batch overhead ``beta_j = k2 + k4 e_j``, and Inoue's Eq-16
+      bound applies to that (alpha'_j, beta_j) system.  The arm is the
+      class-probability mixture of the per-class bounds.
+
+    * **Residual arm.**  Formation never preempts a running batch, so an
+      arrival can additionally find a batch of LONGER requests in service
+      — at most one, ever (every batch formed after it arrives is
+      shorter-or-equal or includes it).  The stationary residual of that
+      batch is bounded by ``rho * H(b, e_J) / 2`` with ``rho = min(1,
+      lam * alpha'_J)`` the amortized-utilization envelope.
+
+    Like :func:`wait_bound` and :func:`multibin_bound` this is an envelope
+    (coupling) argument, not a closed form — no exact mean-delay result is
+    known for batched SRPT — and ``tests/test_policies.py`` validates
+    dominance and non-vacuousness against the simulator across loads.
+    With ``b_max=None`` membership degenerates to dynamic batching (the
+    policy serves every waiting request; order inside a padded batch is
+    irrelevant) and the exact dynamic envelope is returned instead.
+    Stability is the top class's ``lam * alpha'_J < 1``."""
+    if b_max is None:
+        d = dynamic_batching_bound(dist, lat, lam)
+        return {
+            "wait_bound": d["wait_bound"],
+            "class_arm": d["wait_bound"],
+            "residual_arm": 0.0,
+            "edges": [float(dist.max_tokens)],
+            "stable": d["stable"],
+        }
+    assert b_max >= 1
+    J = num_classes
+    k1, k2, k3, k4 = lat.k1, lat.k2, lat.k3, lat.k4
+    edges = sorted({int(np.searchsorted(dist.cdf, j / J))
+                    for j in range(1, J)} | {int(dist.max_tokens)})
+    class_arm, prev_f = 0.0, 0.0
+    for e in edges:
+        f = float(dist.cdf[e])
+        p, prev_f = f - prev_f, f
+        if p <= 0.0:
+            continue
+        beta = k2 + k4 * e
+        alpha_p = k1 + k3 * e + beta / b_max
+        class_arm += p * inoue_bound(lam * f, alpha_p, beta)
+    e_top = edges[-1]
+    beta_top = k2 + k4 * e_top
+    alpha_top = k1 + k3 * e_top + beta_top / b_max
+    rho = min(1.0, lam * alpha_top)
+    residual = rho * float(lat.batch_time(b_max, e_top)) / 2.0
+    return {
+        "wait_bound": float(class_arm + residual),
+        "class_arm": float(class_arm),
+        "residual_arm": float(residual),
+        "edges": [float(e) for e in edges],
+        "stable": lam * alpha_top < 1.0,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Prefill/decode tandem with a KV-memory budget: decomposition bound
+# ----------------------------------------------------------------------------
+
+def tandem_bound(dist: TokenDistribution, lat: BatchLatencyModel, lam: float,
+                 memory=None, quantile: float = 1.0) -> dict:
+    """Mean-delay envelope for the memory-gated prefill/decode tandem
+    (:mod:`repro.core.memory`), decomposed by which resource binds:
+
+    * **Slack arm** (budget never binds).  The pipelined tandem starts
+      every batch no later than the serial single-stage system would
+      (prefill frees before the decode tail), so with unconstrained
+      memory the serial dynamic-batching envelope
+      (:func:`dynamic_batching_bound`) dominates.  This is the
+      ``wait_bound`` for a null budget.
+
+    * **Memory arm** (budget binds).  The SERIAL-gated envelope: pad
+      every request to the ``quantile``-capped max support ``L_q``, cap
+      batches at ``b_mem = floor(M / footprint(L_q))`` — the largest
+      batch GUARANTEED to fit (``MemoryBudget.max_batch``) — and admit
+      only after the previous batch completes and frees its KV, so the
+      capped clearing amortizes to ``alpha' = k1 + k3 L_q + (k2 + k4
+      L_q)/b_mem``, ``beta = k2 + k4 L_q``, bounded by Inoue's Eq 16.
+      This is the constrained ``wait_bound``; the slack arm is reported
+      alongside as the M -> inf reference (it is NOT valid when memory
+      binds: the gate forces smaller batches than serve-all forms, and
+      constrained cells simulate above it).
+
+    A finding the validation suite pins down: pipelining is NOT
+    uniformly dominated by this serial coupling.  At *intermediate*
+    budgets the prefill stage races ahead of the slow decode stage,
+    fills the budget with the KV of admitted-but-undecoded batches, and
+    subsequent admissions fragment into small, poorly amortized batches
+    — the simulated tandem then sits ABOVE the serial envelope (e.g.
+    lam=0.12, M=8000 on the standard UNI/LAT constants) while remaining
+    stable.  The bound therefore certifies the admission-dominated
+    regime (small ``b_mem``, where gated admission serializes the
+    pipeline and the coupling is tight); ``tests/test_memory.py``
+    validates multi-seed dominance and tightness there, plus the
+    instability flag where the worst-case certificate ``lam * alpha' <
+    1`` fails (the cell may still simulate stably — mixed-size batches
+    pack better than the ``L_q`` worst case — but no envelope guarantee
+    exists, and the bound is inf)."""
+    from repro.core.memory import memory_from_spec
+    budget = memory_from_spec(memory)
+    slack = dynamic_batching_bound(dist, lat, lam, quantile=quantile)
+    if budget.is_null:
+        return {
+            "wait_bound": slack["wait_bound"],
+            "slack_arm": slack["wait_bound"],
+            "memory_arm": None,
+            "b_mem": None,
+            "quantile": float(quantile),
+            "stable": slack["stable"],
+        }
+    b_mem = budget.max_batch(dist, quantile)
+    lq = float(dist.max_order_stat_limit(quantile))
+    # the prompt enters the FOOTPRINT (via max_batch) but not the decode
+    # clock: H depends on generated tokens only
+    beta = lat.k2 + lat.k4 * lq
+    alpha_p = lat.k1 + lat.k3 * lq + beta / b_mem
+    mem_arm = inoue_bound(lam, alpha_p, beta)
+    return {
+        "wait_bound": float(mem_arm),
+        "slack_arm": slack["wait_bound"],
+        "memory_arm": float(mem_arm),
+        "b_mem": int(b_mem),
+        "alpha": float(alpha_p),
+        "beta": float(beta),
+        "quantile": float(quantile),
+        "stable": lam * alpha_p < 1.0,
+    }
+
+
+# ----------------------------------------------------------------------------
 # Server breakdowns (beyond paper; M/G/1 with interruptions)
 # ----------------------------------------------------------------------------
 

@@ -69,6 +69,12 @@ class Recommendation:
     availability: float = 1.0           # learned replica availability
     shed_prob: float = 0.0              # admission drop prob. keeping the
     #                                     surviving fleet under target util
+    memory_budget: Optional[float] = None   # per-replica KV-token capacity
+    #                                     the recommendation was sized for;
+    #                                     b_max is then capped at the
+    #                                     effective b(M) (memory.MemoryBudget
+    #                                     .max_batch) so recommended batches
+    #                                     always fit the budget
 
 
 def tail_index(dist: TokenDistribution) -> float:
@@ -85,7 +91,9 @@ class AdaptiveController:
                  heavy_tail_scv: float = 0.5, b_search: int = 64,
                  num_bins: int = 4, length_predictor: str = "oracle",
                  max_replicas: int = 1,
-                 replica_target_util: float = 0.7):
+                 replica_target_util: float = 0.7,
+                 memory=None, memory_quantile: float = 1.0,
+                 prefix_discount: float = 0.0):
         self.single_lat = single_lat
         self.batch_lat = batch_lat
         self.theta = theta
@@ -105,6 +113,18 @@ class AdaptiveController:
         assert 0.0 < replica_target_util < 1.0
         self.max_replicas = int(max_replicas)
         self.replica_target_util = float(replica_target_util)
+        # KV-memory axis (repro.core.memory): recommendations trade batch
+        # size against KV headroom by capping b_max at the effective b(M).
+        # ``prefix_discount`` gamma composes with PR 9 sessions' KV reuse:
+        # a reused prefix holds only (1-gamma) of its prompt tokens, so the
+        # per-request footprint shrinks and b(M) grows accordingly.
+        from repro.core.memory import memory_from_spec
+        budget = memory_from_spec(memory)
+        self.memory = None if budget.is_null else budget
+        assert 0.0 < memory_quantile <= 1.0
+        assert 0.0 <= prefix_discount < 1.0
+        self.memory_quantile = float(memory_quantile)
+        self.prefix_discount = float(prefix_discount)
         self._tokens = deque(maxlen=window)
         self._arrivals = deque(maxlen=window)
         self._episodes = deque(maxlen=window)   # (up_seconds, down_seconds)
@@ -191,6 +211,44 @@ class AdaptiveController:
                 # tail: route by predicted length instead (bin_edges below)
                 policy = "multibin"
 
+        # KV-memory axis (repro.core.memory): trade batch size against KV
+        # headroom.  The effective b(M) = floor(M / footprint(L_q)) caps
+        # b_max so a recommended batch always FITS the budget.  When the
+        # gate BINDS (the tandem bound's memory arm dominates its slack
+        # arm), serve-all formation is the wrong discipline: the prefill
+        # stage races ahead of decode, fills the budget, and admissions
+        # fragment into small poorly-amortized batches (docs/memory.md).
+        # The controller then throttles formation with a count trigger
+        # sized so TWO batches in flight (one decoding, one prefilled)
+        # fit worst-case: b_pipe = max(1, b_mem // 2), refined by the
+        # fixed-batch optimizer below that cap.  Sessions' prefix reuse
+        # (gamma) shrinks the footprint, so a cache-heavy workload earns
+        # a larger b(M).
+        b_mem = None
+        mem_binding = False
+        if self.memory is not None:
+            from repro.core.bulk import tandem_bound
+            budget = self.memory
+            if self.prefix_discount > 0.0:
+                budget = dataclasses.replace(
+                    budget, prompt_tokens=budget.prompt_tokens
+                    * (1.0 - self.prefix_discount))
+            tb = tandem_bound(clipped, self.batch_lat, lam, memory=budget,
+                              quantile=self.memory_quantile)
+            b_mem = tb["b_mem"]
+            b_max = b_mem if b_max is None else min(b_max, b_mem)
+            # the memory arm approaches the slack arm from above as the
+            # budget loosens (it carries an extra beta/b_mem amortization
+            # term), so "binding" needs a margin, not a plain comparison
+            mem_binding = (not tb["stable"]
+                           or tb["memory_arm"] >= 1.5 * tb["slack_arm"])
+            if mem_binding:
+                b_pipe = max(1, b_mem // 2)
+                fb = optimal_fixed_batch(clipped, self.batch_lat, lam,
+                                         b_max=b_pipe)
+                policy = "fixed"
+                b_max = fb["b_star"]
+
         # fleet axis (repro.core.fleet): smallest replica count keeping
         # per-replica batched utilization under target; a heavy tail wants
         # length-aware dispatch (predicted-work balancing), a light tail
@@ -215,8 +273,11 @@ class AdaptiveController:
             lam_hat=lam, replicas=replicas, router=router,
             availability=avail,
             shed_prob=self.shed_probability(lam, clipped),
+            memory_budget=(float(self.memory.capacity)
+                           if self.memory is not None else None),
             details={"scv": scv, "objective": ch.objective,
-                     "expected_wait": ch.wait, "loss_frac": ch.loss_frac},
+                     "expected_wait": ch.wait, "loss_frac": ch.loss_frac,
+                     "b_mem": b_mem, "memory_binding": mem_binding},
             # multibin and least_work route on predicted length: name the
             # predictor that should feed them (repro.core.predictors)
             predictor=(self.length_predictor

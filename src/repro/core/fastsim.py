@@ -106,7 +106,7 @@ def simulate_policy_fast(policy: BatchPolicy, lam: float,
                          num_requests: int = 200_000, seed: int = 0,
                          workload=None, fault_trace=None,
                          traffic=None, sessions=None,
-                         prefix_discount: float = 0.0) -> dict:
+                         prefix_discount: float = 0.0, memory=None) -> dict:
     """Fast twin of :func:`repro.core.simulate.simulate_policy`: dispatch to
     the policy's compiled kernel, or fall back to the oracle when the
     policy has none (``fast_kernel=None``).
@@ -133,12 +133,35 @@ def simulate_policy_fast(policy: BatchPolicy, lam: float,
     twin's parameter: the SAME feedback fixed point
     (:func:`repro.core.sessions.simulate_policy_sessions`) runs with the
     compiled kernels as the inner pass, so oracle ≡ fastsim under
-    feedback is structural; a null model takes this exact code path."""
+    feedback is structural; a null model takes this exact code path.
+
+    ``memory`` switches batch service to the prefill/decode tandem with
+    KV-budget admission, exactly like the oracle twin's parameter: the
+    dynamic (``batch_scan``, non-elastic) lane gets a compiled
+    batch-event while_loop (``_tandem_loop``, bit-equal trajectories);
+    elastic and the batch-event policies fall back to the tandem oracle
+    the way ``fast_kernel=None`` policies always have.  A null budget
+    takes this exact code path."""
+    mem = None
+    if memory is not None:
+        from repro.core.memory import check_policy_supports_memory, \
+            memory_from_spec
+        mem = memory_from_spec(memory)
+        if mem.is_null:
+            mem = None
+        else:
+            check_policy_supports_memory(policy)
     if sessions is not None:
         from repro.core.sessions import (session_from_spec,
                                          simulate_policy_sessions)
         model = session_from_spec(sessions)
         if not model.is_null:
+            if mem is not None:
+                raise ValueError(
+                    "sessions= x memory= is not supported: turn re-entry "
+                    "holds KV across think times (a different occupancy "
+                    "law); run the tandem on the expanded per-turn stream "
+                    "instead")
             if workload is not None:
                 raise ValueError("sessions= expands its own workload; "
                                  "pass lam/num_requests/seed instead of "
@@ -156,6 +179,27 @@ def simulate_policy_fast(policy: BatchPolicy, lam: float,
             wl = workload if workload is not None else \
                 policy.sample_workload(lam, dist, num_requests, seed)
             workload = warp_workload(wl, tm, seed)
+    if mem is not None:
+        lane = policy.scan_lane()
+        if lane is None or lane[0]:
+            # elastic (per-request release times) and the batch-event
+            # policies (non-contiguous membership) have no compiled
+            # tandem twin yet: oracle fallback, traffic already applied
+            return simulate_policy(policy, lam, dist, lat,
+                                   num_requests=num_requests, seed=seed,
+                                   workload=workload,
+                                   fault_trace=fault_trace, memory=mem)
+        if fault_trace is not None and not fault_trace.empty:
+            from repro.core.simulate import _with_fault_trace
+            wl = workload if workload is not None else \
+                policy.sample_workload(lam, dist, num_requests, seed)
+            return _with_fault_trace(
+                lambda op_wl: _tandem_dynamic_kernel(
+                    policy, lam, dist, lat, num_requests, seed, mem,
+                    workload=op_wl),
+                wl, fault_trace)
+        return _tandem_dynamic_kernel(policy, lam, dist, lat, num_requests,
+                                      seed, mem, workload=workload)
     if policy.fast_kernel is None:
         return simulate_policy(policy, lam, dist, lat,
                                num_requests=num_requests, seed=seed,
@@ -733,6 +777,146 @@ def _srpt_kernel(policy, lam, dist, lat, num_requests, seed,
 
 
 # ----------------------------------------------------------------------------
+# Prefill/decode tandem with a KV-memory budget (repro.core.memory)
+# ----------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _tandem_loop(L: int, K: int, M: int):
+    """One iteration per BATCH of the memory-gated tandem, DYNAMIC
+    formation only (contiguous membership + whole-batch release at decode
+    end => one release-ledger event per batch, O(1) carry growth).  The
+    admission arithmetic mirrors :func:`repro.core.memory.tandem_oracle`
+    operation for operation — 'right'-sided release search, delayed start
+    via a 'left' search over the release prefix sums, longest admissible
+    prefix via a 'right' search over the footprint prefix sums — so the
+    event ORDER (membership, deferrals, blocked counts) matches the
+    oracle exactly and the clocks agree to float rounding (XLA may fuse
+    multiply-adds the NumPy loop keeps separate)."""
+
+    def run(arr, table, fp_cum, n, b_max, cap, k1, k2, k3, k4):
+        def cond(c):
+            return c[0] < n
+
+        def body(c):
+            (head, t_pf, t_dec, nb, blocked, blocked_t, deferred,
+             rel_t, rel_cum, o_start, o_end, o_dend) = c
+            a = arr[head]
+            idle = a >= t_pf
+            start0 = jnp.where(idle, a, t_pf)
+            hi_busy = jnp.searchsorted(arr, t_pf,
+                                       side="right").astype(jnp.int32)
+            hi = jnp.where(idle, head + 1,
+                           jnp.minimum(hi_busy, head + b_max))
+            # -- releases banked by the candidate start ----------------
+            r = jnp.searchsorted(rel_t, start0, side="right")
+            target = cap + rel_cum[r]
+            first = fp_cum[head + 1]
+            fits = first <= target
+            # delayed start: earliest release instant freeing `need`
+            need = first - cap
+            rs = jnp.searchsorted(rel_cum, need, side="left")
+            start = jnp.where(fits, start0,
+                              rel_t[jnp.maximum(rs - 1, 0)])
+            r2 = jnp.searchsorted(rel_t, start, side="right")
+            target = jnp.where(fits, target, cap + rel_cum[r2])
+            blocked = blocked + jnp.where(fits, 0, 1)
+            blocked_t = blocked_t + jnp.where(fits, 0.0, start - start0)
+            # -- longest admissible prefix over the footprint cumsum ---
+            e = jnp.searchsorted(fp_cum, target,
+                                 side="right").astype(jnp.int32) - 1
+            e = jnp.maximum(jnp.minimum(hi, e), head + 1)
+            deferred = deferred + (hi - e)
+            # -- tandem service ----------------------------------------
+            m = e - head
+            kk = jnp.floor(jnp.log2(m.astype(jnp.float64))).astype(jnp.int32)
+            p = jnp.left_shift(jnp.int32(1), kk)
+            rm = jnp.maximum(table[kk, 0, head], table[kk, 0, e - p])
+            bf = m.astype(jnp.float64)
+            pf = k1 * bf + k2
+            h = k1 * bf + k2 + (k3 * bf + k4) * rm
+            p_end = start + pf
+            d_start = jnp.maximum(p_end, t_dec)
+            d_end = d_start + (h - pf)    # same op order as stage_split
+            return (e, p_end, d_end, nb + 1, blocked, blocked_t, deferred,
+                    rel_t.at[nb].set(d_end),
+                    rel_cum.at[nb + 1].set(fp_cum[e]),
+                    o_start.at[nb].set(start), o_end.at[nb].set(e),
+                    o_dend.at[nb].set(d_end))
+
+        init = (jnp.int32(0), jnp.float64(0.0), jnp.float64(0.0),
+                jnp.int32(0), jnp.int32(0), jnp.float64(0.0), jnp.int32(0),
+                jnp.full(M, jnp.inf), jnp.full(M + 1, jnp.inf).at[0].set(0.0),
+                jnp.zeros(M, jnp.float64), jnp.zeros(M, jnp.int32),
+                jnp.zeros(M, jnp.float64))
+        (head, t_pf, t_dec, nb, blocked, blocked_t, deferred,
+         rel_t, rel_cum, o_start, o_end, o_dend) = lax.while_loop(
+            cond, body, init)
+        return nb, blocked, blocked_t, deferred, o_start, o_end, o_dend
+
+    return jax.jit(run)
+
+
+def _tandem_dynamic_kernel(policy, lam, dist, lat, num_requests, seed,
+                           budget, workload=None) -> dict:
+    """Compiled twin of the tandem oracle for the ``batch_scan`` lane
+    (dynamic formation, padded decode).  Elastic and the batch-event
+    policies (multibin/wait/srpt/fixed) release KV per REQUEST or form
+    non-contiguous batches — their memory runs fall back to the oracle,
+    like ``fast_kernel=None`` policies do."""
+    from repro.core.memory import occupancy_stats
+    wl = workload if workload is not None else \
+        policy.sample_workload(lam, dist, num_requests, seed)
+    arr, tok = wl.arrivals, wl.tokens
+    n = len(arr)
+    fp = budget.footprint(tok)
+    if n and float(fp.max()) > budget.capacity:
+        raise ValueError(
+            f"memory budget {budget.capacity} cannot hold the largest "
+            f"single request (footprint {float(fp.max())}); no schedule "
+            "exists")
+    arr_p, _, L = _pow2_rows([arr], np.inf)
+    tok_p, _, _ = _pow2_rows([tok], -np.inf)
+    table = _sparse_max_table(tok_p)
+    # prefix footprint sums on the HOST (np.cumsum accumulates in the same
+    # sequential order as the oracle's running `A`), +inf beyond n so the
+    # admission search never admits padded rows
+    fp_cum = np.full(L + 1, np.inf)
+    fp_cum[0] = 0.0
+    fp_cum[1:n + 1] = np.cumsum(fp)
+    M = max(1 << max(n - 1, 1).bit_length(), 2)
+    with jax.experimental.enable_x64():
+        nb, blocked, blocked_t, deferred, o_start, o_end, o_dend = \
+            _tandem_loop(L, table.shape[0], M)(
+                jnp.asarray(arr_p[0], jnp.float64),
+                jnp.asarray(table, jnp.float64),
+                jnp.asarray(fp_cum, jnp.float64), jnp.int32(n),
+                jnp.int32(policy.b_max if policy.b_max is not None else L),
+                jnp.float64(budget.capacity),
+                jnp.float64(lat.k1), jnp.float64(lat.k2),
+                jnp.float64(lat.k3), jnp.float64(lat.k4))
+        nb = int(nb)
+        o_start = np.asarray(o_start)[:nb]
+        o_end = np.asarray(o_end)[:nb]
+        o_dend = np.asarray(o_dend)[:nb]
+    sizes = np.diff(o_end, prepend=0)
+    starts_req = np.repeat(o_start, sizes)      # batches are contiguous
+    comps_req = np.repeat(o_dend, sizes)
+    waits = starts_req - arr
+    w = _warm(waits)
+    mem = occupancy_stats(starts_req, comps_req, fp, float(budget.capacity))
+    mem["blocked_batches"] = int(blocked)
+    mem["blocked_time"] = float(blocked_t)
+    mem["deferred_requests"] = int(deferred)
+    return {
+        "mean_wait": float(w.mean()) if w.size else 0.0,
+        "p95_wait": float(np.percentile(w, 95)) if w.size else 0.0,
+        "mean_batch": float(n / max(nb, 1)),
+        "waits": w,
+        "memory": mem,
+    }
+
+
+# ----------------------------------------------------------------------------
 # Uniform sweep: one vmapped scan for every batch_scan lane, kernels for rest
 # ----------------------------------------------------------------------------
 
@@ -969,7 +1153,7 @@ def simulate_fleet_fast(router, policy: BatchPolicy, lam: float, R: int,
                         dist: Optional[TokenDistribution], lat,
                         num_requests: int = 100_000, seed: int = 0,
                         traffic=None, sessions=None,
-                        prefix_discount: float = 0.0) -> dict:
+                        prefix_discount: float = 0.0, memory=None) -> dict:
     """Fast twin of :func:`repro.core.fleet.route_oracle`: the router's
     split is identical (state-dependent assignment via the jitted backlog
     scan), and each replica's sub-workload runs through the policy's
@@ -979,7 +1163,10 @@ def simulate_fleet_fast(router, policy: BatchPolicy, lam: float, R: int,
     ``prefix_discount`` re-enter completed turns through the fleet
     feedback fixed point
     (:func:`repro.core.sessions.simulate_fleet_sessions`) with the
-    kernels as the inner pass — same control flow as the oracle twin."""
+    kernels as the inner pass — same control flow as the oracle twin.
+    ``memory`` gives EACH replica its own KV budget (capacity is
+    per-replica HBM, not a fleet pool) through the unchanged
+    single-server tandem kernels."""
     from repro.core.fleet import router_from_spec, run_fleet
     router = router_from_spec(router)
     if sessions is not None:
@@ -995,7 +1182,7 @@ def simulate_fleet_fast(router, policy: BatchPolicy, lam: float, R: int,
                                R, fast=True, traffic=traffic)
     return run_fleet(fw, policy, lat, dist,
                      lambda pol, wl: simulate_policy_fast(
-                         pol, lam, dist, lat, workload=wl))
+                         pol, lam, dist, lat, workload=wl, memory=memory))
 
 
 def run_controlled(policy, lam, dist, lat, **kw):

@@ -548,6 +548,22 @@ def _aggregate(per: List[Optional[dict]], fw: FleetWorkload) -> dict:
         # total requests / total batches across the fleet
         nb = sum(len(p["waits"]) / max(p["mean_batch"], 1e-12) for p in live)
         out["mean_batch"] = float(waits.size / max(nb, 1e-12))
+    if live and all("memory" in p for p in live):
+        ms = [p["memory"] for p in live]
+        ws = np.array([max(len(p["waits"]), 1) for p in live], np.float64)
+        out["memory"] = {
+            "capacity": ms[0]["capacity"],           # per-replica budget
+            "kv_peak": max(m["kv_peak"] for m in ms),
+            "kv_mean": float(np.average([m["kv_mean"] for m in ms],
+                                        weights=ws)),
+            "utilization": max(m["utilization"] for m in ms),
+            "allocated": float(sum(m["allocated"] for m in ms)),
+            "freed": float(sum(m["freed"] for m in ms)),
+            "blocked_batches": int(sum(m["blocked_batches"] for m in ms)),
+            "blocked_time": float(sum(m["blocked_time"] for m in ms)),
+            "deferred_requests": int(sum(m["deferred_requests"]
+                                         for m in ms)),
+        }
     return out
 
 
@@ -567,7 +583,7 @@ def route_oracle(router, policy: BatchPolicy, lam: float, R: int,
                  dist: Optional[TokenDistribution], lat,
                  num_requests: int = 100_000, seed: int = 0,
                  traffic=None, sessions=None,
-                 prefix_discount: float = 0.0) -> dict:
+                 prefix_discount: float = 0.0, memory=None) -> dict:
     """Fleet reference oracle: route, then reuse the single-server
     reference event loops (``repro.core.simulate``) per replica,
     unchanged.  ``router``: a RoutingPolicy, registry name, or spec.
@@ -575,7 +591,9 @@ def route_oracle(router, policy: BatchPolicy, lam: float, R: int,
     ``sessions`` / ``prefix_discount`` re-enter completed turns through
     the fleet feedback fixed point
     (:func:`repro.core.sessions.simulate_fleet_sessions`); a null model
-    takes this exact code path (bit-equality by construction)."""
+    takes this exact code path (bit-equality by construction).
+    ``memory`` gives EACH replica its own KV budget (per-replica HBM)
+    through the unchanged single-server tandem oracle."""
     from repro.core.simulate import simulate_policy
     router = router_from_spec(router)
     if sessions is not None:
@@ -591,7 +609,7 @@ def route_oracle(router, policy: BatchPolicy, lam: float, R: int,
                                traffic=traffic)
     return run_fleet(fw, policy, lat, dist,
                      lambda pol, wl: simulate_policy(
-                         pol, lam, dist, lat, workload=wl))
+                         pol, lam, dist, lat, workload=wl, memory=memory))
 
 
 # ----------------------------------------------------------------------------

@@ -63,6 +63,16 @@ class BatchLatencyModel:
         l = np.asarray(l, np.float64)
         return self.k1 * b + self.k2 + (self.k3 * b + self.k4) * l
 
+    def prefill_time(self, b):
+        """Stage 1 of the tandem split: the first-token term k1*b + k2."""
+        return self.k1 * np.asarray(b, np.float64) + self.k2
+
+    def decode_time(self, b, l):
+        """Stage 2 of the tandem split: the per-token term (k3*b + k4)*l,
+        so batch_time == prefill_time + decode_time exactly (Eq 18)."""
+        b = np.asarray(b, np.float64)
+        return (self.k3 * b + self.k4) * np.asarray(l, np.float64)
+
     def elastic_batch_time(self, ns):
         """Paper Eq (26): completion time of the slowest member when short
         replies exit early. ns: array of per-request output token counts."""

@@ -124,6 +124,12 @@ class _DynamicFormation:
         self.head = hi
         return float(start), np.arange(head, hi)
 
+    def rewind(self, k: int):
+        """Defer the last ``k`` members of the batch just formed (memory
+        admission): they rejoin the head of the queue for the next
+        trigger."""
+        self.head -= k
+
 
 class _FixedFormation:
     """Wait until exactly ``b`` requests are present (paper §IV-C)."""
@@ -138,9 +144,19 @@ class _FixedFormation:
         head, b = self.head, self.b
         if head >= self.n:
             return None
-        start = max(t_free, float(self.arrivals[head + b - 1]))
-        self.head = head + b
-        return start, np.arange(head, head + b)
+        # hi == head + b always, except after a memory-admission rewind
+        # left a < b remnant near the truncated end — flush it rather than
+        # strand requests that were already admitted once
+        hi = min(head + b, self.n)
+        start = max(t_free, float(self.arrivals[hi - 1]))
+        self.head = hi
+        return start, np.arange(head, hi)
+
+    def rewind(self, k: int):
+        # under a memory budget a "fixed-b" batch may serve a prefix and
+        # re-offer the rest — exact-b is an admission target, not a
+        # guarantee, once KV is the binding constraint
+        self.head -= k
 
 
 class _MultiBinFormation:
@@ -157,6 +173,7 @@ class _MultiBinFormation:
         self.members = [np.nonzero(bin_of == j)[0] for j in range(num_bins)]
         self.arr = [arrivals[m] for m in self.members]
         self.heads = [0] * num_bins
+        self._last_bin = -1
 
     def next_batch(self, t_free: float):
         a_min, j_min = np.inf, -1
@@ -174,7 +191,11 @@ class _MultiBinFormation:
             if self.b_max:
                 hi = min(hi, h + self.b_max)
         self.heads[j_min] = hi
+        self._last_bin = j_min
         return start, self.members[j_min][h:hi]
+
+    def rewind(self, k: int):
+        self.heads[self._last_bin] -= k
 
 
 class _WaitFormation:
@@ -209,6 +230,9 @@ class _WaitFormation:
         self.head = hi
         return start, np.arange(head, hi)
 
+    def rewind(self, k: int):
+        self.head -= k
+
 
 class _SRPTFormation:
     """SRPT-like shortest-predicted-first selection: the waiting room is
@@ -225,6 +249,7 @@ class _SRPTFormation:
         self.b_max = b_max
         self.head = 0
         self.heap: List = []
+        self._last_pops: List = []
 
     def _admit(self, t: float):
         import heapq
@@ -246,8 +271,16 @@ class _SRPTFormation:
             start = t_free
             cap = self.b_max if self.b_max else len(self.heap)
         take = min(cap, len(self.heap))
-        idx = np.array([heapq.heappop(self.heap)[1] for _ in range(take)])
-        return start, idx
+        pops = [heapq.heappop(self.heap) for _ in range(take)]
+        self._last_pops = pops
+        return start, np.array([p[1] for p in pops])
+
+    def rewind(self, k: int):
+        import heapq
+        # deferred members keep their (predicted, arrival) heap key, so
+        # they compete on equal terms at the next trigger
+        for p in self._last_pops[len(self._last_pops) - k:]:
+            heapq.heappush(self.heap, p)
 
 
 # ----------------------------------------------------------------------------
@@ -380,6 +413,15 @@ class BatchPolicy:
         batch."""
         h = clock.batch_time(ns)
         return h, np.full(len(ns), h)
+
+    def stage_split(self, ns: np.ndarray, lat):
+        """Tandem split of the batch law (:mod:`repro.core.memory`):
+        (prefill seconds, per-request decode offsets from prefill end),
+        with prefill + max(offsets) == ``batch_time`` exactly.  Default:
+        padded semantics — everyone decodes to the batch max."""
+        pf = float(lat.prefill_time(len(ns)))
+        h = self.batch_time(ns, lat)
+        return pf, np.full(len(ns), h - pf)
 
     # -------------------- analytics --------------------
     def analytic_delay(self, lam: float, dist: TokenDistribution,
@@ -531,6 +573,16 @@ class ElasticPolicy(DynamicPolicy):
         offsets = np.empty(len(ns))
         offsets[order] = comp
         return float(comp.max()), offsets
+
+    def stage_split(self, ns, lat):
+        # Eq 26 early exit: per-request completions (sorted ascending in
+        # length) measured from the shared prefill end
+        comp = lat.elastic_completion_times(ns)
+        order = np.argsort(ns, kind="stable")
+        offsets = np.empty(len(ns))
+        offsets[order] = comp
+        pf = float(lat.prefill_time(len(ns)))
+        return pf, offsets - pf
 
     def scan_lane(self):
         return (True, self.b_max)
@@ -739,17 +791,28 @@ class SRPTPolicy(BatchPolicy):
     its true length and pads the whole batch.  With ``b_max=None`` every
     waiting request is served, and membership degenerates to dynamic
     batching (order inside a padded batch is irrelevant) — so the
-    discipline defaults to a finite cap.  No exact mean-delay formula is
+    discipline defaults to a finite cap.  No EXACT mean-delay formula is
     known for batched SRPT (classic SRPT analysis is per-request
-    preemptive), so ``analytic_kind`` stays None."""
+    preemptive), but a size-interval envelope upper-bounds it:
+    :func:`repro.core.bulk.srpt_bound` treats the shortest-first room as
+    priority classes by length quantile and pads each class's clearing
+    time to its own upper edge — ``analytic_kind='bound'`` under oracle
+    ordering (a noisy ``predictor`` scrambles the class membership the
+    envelope assumes, so it downgrades to None)."""
 
     name = "srpt"
     fast_kernel = "srpt"
+    analytic_kind = "bound"       # size-interval envelope (bulk.srpt_bound)
 
     def __init__(self, b_max: Optional[int] = 8,
                  n_max: Optional[int] = None, predictor=None):
         super().__init__(n_max, predictor)
         self.b_max = b_max
+        if predictor is not None:
+            # the envelope's class decomposition assumes true-length
+            # ordering; misprediction leaks long requests into short
+            # classes and the bound no longer dominates
+            self.analytic_kind = None
 
     def formation(self, arrivals, tokens, dist=None, predicted=None):
         key = tokens if predicted is None else predicted
@@ -757,6 +820,13 @@ class SRPTPolicy(BatchPolicy):
 
     def batch_time(self, ns, lat) -> float:
         return float(lat.batch_time(len(ns), ns.max()))
+
+    def analytic_delay(self, lam, dist, lat) -> Optional[float]:
+        from repro.core.bulk import srpt_bound
+        if self.predictor is not None:
+            return None
+        d = dist if self.n_max is None else dist.clip(self.n_max)
+        return srpt_bound(d, lat, lam, self.b_max)["wait_bound"]
 
 
 @register

@@ -87,7 +87,7 @@ def simulate_policy(policy: BatchPolicy, lam: float,
                     num_requests: int = 200_000, seed: int = 0,
                     workload: Optional[Workload] = None,
                     fault_trace=None, traffic=None, sessions=None,
-                    prefix_discount: float = 0.0) -> dict:
+                    prefix_discount: float = 0.0, memory=None) -> dict:
     """Run ``policy`` through its reference event loop.  ``lat`` is the
     policy's latency law (``LatencyModel`` for single-service policies,
     ``BatchLatencyModel`` otherwise — a batch law handed to a
@@ -117,12 +117,35 @@ def simulate_policy(policy: BatchPolicy, lam: float,
     think`` via the feedback fixed point in
     :func:`repro.core.sessions.simulate_policy_sessions`.  A null model
     (``single`` / zero feedback) takes this exact code path — bit
-    equality by construction."""
+    equality by construction.
+
+    ``memory`` (a :class:`repro.core.memory.MemoryBudget`, bare capacity
+    number, or spec dict) switches batch service to the prefill/decode
+    TANDEM with KV-budget admission (:func:`repro.core.memory.
+    tandem_oracle`).  A null budget (capacity None/inf) takes this exact
+    code path — bit equality by construction, because an unconstrained
+    tandem pipeline is a different (faster) system than the serial
+    ``H(b, l)`` gate, not a degenerate case of it."""
+    mem = None
+    if memory is not None:
+        from repro.core.memory import check_policy_supports_memory, \
+            memory_from_spec
+        mem = memory_from_spec(memory)
+        if mem.is_null:
+            mem = None
+        else:
+            check_policy_supports_memory(policy)
     if sessions is not None:
         from repro.core.sessions import (session_from_spec,
                                          simulate_policy_sessions)
         model = session_from_spec(sessions)
         if not model.is_null:
+            if mem is not None:
+                raise ValueError(
+                    "sessions= x memory= is not supported: turn re-entry "
+                    "holds KV across think times (a different occupancy "
+                    "law); run the tandem on the expanded per-turn stream "
+                    "instead")
             if workload is not None:
                 raise ValueError("sessions= expands its own workload; "
                                  "pass lam/num_requests/seed instead of "
@@ -139,12 +162,16 @@ def simulate_policy(policy: BatchPolicy, lam: float,
     if traffic is not None:
         from repro.core.traffic import warp_workload
         wl = warp_workload(wl, traffic, seed)
+    if mem is not None:
+        from repro.core.memory import tandem_oracle
+        run = lambda w: tandem_oracle(policy, w, lat, dist, mem)
+    else:
+        run = lambda w: ORACLES[policy.oracle_kind](policy, w, lat, dist)
     if fault_trace is not None and not fault_trace.empty:
-        return _with_fault_trace(
-            lambda op_wl: ORACLES[policy.oracle_kind](policy, op_wl, lat,
-                                                      dist),
-            wl, fault_trace)
-    return ORACLES[policy.oracle_kind](policy, wl, lat, dist)
+        # operational-time transform composes: the tandem (and its KV
+        # admission clock) runs on the server's cumulative-capacity time
+        return _with_fault_trace(run, wl, fault_trace)
+    return run(wl)
 
 
 def _with_fault_trace(run, wl: Workload, trace) -> dict:

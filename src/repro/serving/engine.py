@@ -72,6 +72,12 @@ class EngineConfig:
     #   host  - reference path: host-resident keep indices + per-leaf eager
     #           gathers (one host-visible event per compaction)
     compact_impl: str = "fused"
+    # KV-token budget for one engine (repro.core.memory two-resource
+    # model): generate() refuses a batch whose worst-case footprint
+    # (prompt + target tokens per member) exceeds it, and tracks the
+    # realized occupancy from the live kv_lens at chunk boundaries
+    # (Engine.kv_report).  None = unconstrained.
+    kv_budget: Optional[int] = None
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -142,6 +148,7 @@ class Engine:
         self.step_log: List[dict] = []    # (kind, batch, seq, seconds[, steps])
         self.host_syncs = 0               # device->host blocking round-trips
         self.sample_fallbacks = 0         # non-finite-logit greedy fallbacks
+        self.kv_peak = 0                  # max live KV tokens observed
         self._sample_key = jax.random.PRNGKey(seed)   # decode sampling stream
 
     # ------------------------------------------------------------------
@@ -362,6 +369,25 @@ class Engine:
         return cache, kv_lens, tokens, nb, keys
 
     # ------------------------------------------------------------------
+    def _track_kv(self, kv_lens, nlive: int) -> int:
+        """Record live KV occupancy (sum of kv_lens over occupied slots —
+        the REAL tokens pinned in the cache, not the worst case)."""
+        live_kv = int(np.asarray(kv_lens)[:nlive].sum())
+        if live_kv > self.kv_peak:
+            self.kv_peak = live_kv
+        return live_kv
+
+    def kv_report(self) -> dict:
+        """Realized KV occupancy vs the configured budget (the engine-layer
+        twin of the simulator's ``memory`` block)."""
+        cap = self.ecfg.kv_budget
+        return {
+            "kv_budget": cap,
+            "kv_peak": int(self.kv_peak),
+            "utilization": (self.kv_peak / cap) if cap else 0.0,
+        }
+
+    # ------------------------------------------------------------------
     def generate(self, prompts: List[np.ndarray], target_tokens: List[int],
                  elastic: bool = False, n_max: Optional[int] = None,
                  chunk: Optional[int] = None, return_tokens: bool = False,
@@ -395,8 +421,17 @@ class Engine:
         if n_max is not None:
             targets = np.minimum(targets, n_max)
         nreq = len(prompts)
+        if self.ecfg.kv_budget is not None:
+            worst = int(sum(min(len(p), self.ecfg.max_seq) + int(t)
+                            for p, t in zip(prompts, targets)))
+            if worst > self.ecfg.kv_budget:
+                raise ValueError(
+                    f"batch worst-case KV footprint {worst} exceeds "
+                    f"kv_budget {self.ecfg.kv_budget}; cap the batch "
+                    "upstream (memory-gated admission) or raise the budget")
         syncs0 = self.host_syncs
         cache, kv_lens, last, b, t_prefill = self.prefill_batch(prompts)
+        self._track_kv(kv_lens, nreq)
         slot_keys = None
         if temperature > 0.0:
             # one key per REQUEST (slot i holds request i right after
@@ -465,6 +500,7 @@ class Engine:
                 self.decode_chunk(cache, kv_lens, tok, prod_d, targ_d, steps,
                                   temperature=temperature, top_k=top_k,
                                   slot_keys=slot_keys)
+            self._track_kv(kv_lens, len(live))
             clock += dt
             actives_np = np.asarray(actives)            # [steps, b]
             produced[live] = np.asarray(prod_d)[:len(live)]

@@ -36,6 +36,21 @@ def summarize(result, warmup_frac: float = 0.1) -> dict:
             "kill_events": len(rep.kill_events),
             "availability": [float(a) for a in rep.availability],
         })
+    memo = getattr(result, "memory", None)
+    if memo is not None:
+        # KV-occupancy accounting (repro.core.memory): peak/mean live KV
+        # tokens vs the budget, plus admission blocking/deferral counts
+        out["memory"] = {
+            "capacity": memo["capacity"],
+            "kv_peak": float(memo["kv_peak"]),
+            "kv_mean": float(memo["kv_mean"]),
+            "utilization": float(memo["utilization"]),
+            "allocated": float(memo["allocated"]),
+            "freed": float(memo["freed"]),
+            "blocked_batches": int(memo.get("blocked_batches", 0)),
+            "blocked_time": float(memo.get("blocked_time", 0.0)),
+            "deferred_requests": int(memo.get("deferred_requests", 0)),
+        }
     sess = getattr(result, "sessions", None)
     if sess is not None:
         # re-entrant session accounting (repro.core.sessions): per-turn

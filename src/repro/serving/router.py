@@ -56,6 +56,9 @@ class FleetScheduleResult:
     # per-session accounting (repro.core.sessions); None on
     # session-free runs — the historical result shape
     sessions: Optional[dict] = None
+    # fleet KV-occupancy accounting (repro.core.memory); None on
+    # budget-free runs
+    memory: Optional[dict] = None
 
 
 def _fleet_predictions(policy, predictor, predict_seed: int,
@@ -76,6 +79,32 @@ def _fleet_predictions(policy, predictor, predict_seed: int,
               if has_sessions else None))
 
 
+def _fleet_memory(per) -> Optional[dict]:
+    """Fleet roll-up of per-replica KV accounting: each replica has its
+    OWN budget (per-replica HBM, not a pooled resource), so peaks and
+    utilizations take the worst replica and token/event counts sum."""
+    live = [p for p in per if p is not None]
+    ms = [getattr(p, "memory", None) for p in live]
+    if not ms or any(m is None for m in ms):
+        return None
+    ws = np.array([max(len(p.waits), 1) for p in live], np.float64)
+    out = {
+        "capacity": ms[0]["capacity"],
+        "kv_peak": max(m["kv_peak"] for m in ms),
+        "kv_mean": float(np.average([m["kv_mean"] for m in ms],
+                                    weights=ws)),
+        "utilization": max(m["utilization"] for m in ms),
+        "allocated": float(sum(m["allocated"] for m in ms)),
+        "freed": float(sum(m["freed"] for m in ms)),
+        "deferred_requests": int(sum(m.get("deferred_requests", 0)
+                                     for m in ms)),
+    }
+    if all("blocked_batches" in m for m in ms):
+        out["blocked_batches"] = int(sum(m["blocked_batches"] for m in ms))
+        out["blocked_time"] = float(sum(m["blocked_time"] for m in ms))
+    return out
+
+
 def _merge_replicas(reqs, rep, per, n_total) -> FleetScheduleResult:
     waits = np.zeros(n_total)
     e2e = np.zeros(n_total)
@@ -92,7 +121,7 @@ def _merge_replicas(reqs, rep, per, n_total) -> FleetScheduleResult:
         sizes += list(res.batch_sizes)
         makespan = max(makespan, res.makespan)
     return FleetScheduleResult(waits, e2e, lost, sizes, makespan,
-                               rep, per)
+                               rep, per, memory=_fleet_memory(per))
 
 
 def _route_and_dispatch(router, policy: BatchPolicy, reqs: List[Request],
@@ -135,7 +164,7 @@ class FleetScheduler:
 
     def __init__(self, router, policy: BatchPolicy, clock: ModelClock,
                  R: int, predictor=None, predict_seed: int = 0,
-                 faults=None, **fault_kw):
+                 faults=None, memory=None, **fault_kw):
         assert R >= 1
         self.router = router_from_spec(router)
         self.policy = policy
@@ -149,6 +178,21 @@ class FleetScheduler:
         # keeps the PR 5 body verbatim.
         self.faults = faults
         self.fault_kw = fault_kw
+        # per-replica KV budget (repro.core.memory); every replica gets
+        # its own copy of the budget (its own HBM)
+        from repro.core.memory import (
+            check_policy_supports_memory, memory_from_spec)
+        budget = memory_from_spec(memory)
+        if budget.is_null:
+            self.memory = None
+        else:
+            check_policy_supports_memory(policy)
+            if faults is not None or fault_kw:
+                raise ValueError(
+                    "memory= is not composed with the serving resilience "
+                    "path; use the core layers (simulate/fastsim) for "
+                    "faults x memory")
+            self.memory = budget
 
     def run(self, reqs: List[Request]) -> FleetScheduleResult:
         pol = self.policy
@@ -165,7 +209,8 @@ class FleetScheduler:
                 # has no formation(); admission is FCFS, prediction-free)
                 return pol.scheduler(self.clock).run(sub)
             return PolicyScheduler(pol, self.clock,
-                                   predict_seed=self.predict_seed).run(
+                                   predict_seed=self.predict_seed,
+                                   memory=self.memory).run(
                 sub, predicted=predicted)
 
         return _route_and_dispatch(self.router, pol, reqs,
@@ -192,6 +237,11 @@ class FleetScheduler:
             raise ValueError("sessions are not composed with the serving "
                              "resilience path; construct the "
                              "FleetScheduler without faults/knobs")
+        if self.memory is not None:
+            raise ValueError(
+                "sessions x memory is not supported: turn re-entry holds "
+                "KV across think times, which the per-batch "
+                "allocate/release ledger does not model")
         from repro.core.sessions import (
             _MAX_PASSES, _TOL, _cascade_cancel, _session_summary,
             check_policy_supports_sessions, plan_from_requests)
@@ -320,7 +370,8 @@ def run_fleet_schedule(router, policy: BatchPolicy,
                        engines, reqs: List[Request],
                        R: Optional[int] = None, lat=None,
                        predictor=None, predict_seed: int = 0,
-                       faults=None, **fault_kw) -> FleetScheduleResult:
+                       faults=None, memory=None,
+                       **fault_kw) -> FleetScheduleResult:
     """Execute a routed fleet on the REAL engine layer: form each
     replica's batches on the virtual arrival timeline and run them through
     :func:`~repro.serving.scheduler.run_engine_schedule` (prefill + fused
@@ -337,7 +388,16 @@ def run_fleet_schedule(router, policy: BatchPolicy,
     resilience knob (``kill_at``, ``shed_prob``, ``hedge_slo``, ...)
     reroutes through
     :func:`repro.serving.resilience.run_resilient_engine_fleet`;
-    omitted, the PR 5 body runs verbatim."""
+    omitted, the PR 5 body runs verbatim.
+
+    ``memory`` (budget spec, :mod:`repro.core.memory`): each replica
+    admits against its OWN KV budget via
+    :func:`~repro.serving.scheduler.run_engine_schedule`'s real-footprint
+    gate (not composed with the resilience path)."""
+    if memory is not None and (faults is not None or fault_kw):
+        raise ValueError(
+            "memory= is not composed with the serving resilience path; "
+            "use the core layers (simulate/fastsim) for faults x memory")
     if faults is not None or fault_kw:
         from repro.serving.resilience import run_resilient_engine_fleet
         return run_resilient_engine_fleet(
@@ -356,7 +416,7 @@ def run_fleet_schedule(router, policy: BatchPolicy,
     def runner(r, sub, predicted):
         return run_engine_schedule(policy, engine_of[r], sub,
                                    predict_seed=predict_seed,
-                                   predicted=predicted)
+                                   predicted=predicted, memory=memory)
 
     return _route_and_dispatch(router, policy, reqs, lat, predictor,
                                predict_seed, R, runner)

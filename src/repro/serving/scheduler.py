@@ -127,6 +127,9 @@ class ScheduleResult:
     # per-session accounting (repro.core.sessions); None on
     # session-free runs — the historical result shape
     sessions: Optional[dict] = None
+    # KV-occupancy accounting (repro.core.memory); None on
+    # budget-free runs
+    memory: Optional[dict] = None
 
 
 class PolicyScheduler:
@@ -140,10 +143,16 @@ class PolicyScheduler:
     scheduler (None keeps it); formation sees the PREDICTED lengths while
     clipping and the service clock keep the true ``target_output_tokens``
     (the predicted-vs-true convention, :mod:`repro.core.predictors`).
-    ``predict_seed`` keys the predictor's rng stream."""
+    ``predict_seed`` keys the predictor's rng stream.
+
+    ``memory`` (a :class:`repro.core.memory.MemoryBudget`, capacity
+    number, or spec dict; None = unconstrained) switches the timeline to
+    the memory-gated prefill/decode tandem of
+    :func:`repro.core.memory.tandem_oracle`, driven through this clock's
+    batch law — a null budget keeps the exact single-stage path."""
 
     def __init__(self, policy: BatchPolicy, clock: ModelClock,
-                 predictor=None, predict_seed: int = 0):
+                 predictor=None, predict_seed: int = 0, memory=None):
         self.policy = policy
         self.clock = clock
         if predictor is not None:
@@ -151,6 +160,14 @@ class PolicyScheduler:
             predictor = predictor_from_spec(predictor)
         self.predictor = predictor
         self.predict_seed = predict_seed
+        from repro.core.memory import (
+            check_policy_supports_memory, memory_from_spec)
+        budget = memory_from_spec(memory)
+        if budget.is_null:
+            self.memory = None
+        else:
+            check_policy_supports_memory(policy)
+            self.memory = budget
 
     def run(self, reqs: List[Request],
             predicted: Optional[np.ndarray] = None) -> ScheduleResult:
@@ -171,6 +188,9 @@ class PolicyScheduler:
         if predicted is None:
             predicted = _request_predictions(
                 pol, self.predictor, self.predict_seed, ns, reqs)
+        if self.memory is not None:
+            return self._run_tandem(arr, ns, (
+                None if predicted is None else predicted[:n]))
         fs = pol.formation(arr, ns, predicted=(
             None if predicted is None else predicted[:n]))
         t_free = 0.0
@@ -187,6 +207,25 @@ class PolicyScheduler:
             sizes.append(len(idx))
             t_free = start + h
         return ScheduleResult(waits, e2e, lost, sizes, t_free)
+
+    def _run_tandem(self, arr: np.ndarray, ns: np.ndarray,
+                    predicted: Optional[np.ndarray]) -> ScheduleResult:
+        """Memory-gated tandem timeline: the ONE reference loop
+        (:func:`repro.core.memory.tandem_oracle`) driven through this
+        scheduler's clock, so the serving layer inherits admission,
+        deferral and occupancy accounting with no second implementation."""
+        import types
+        from repro.core.memory import tandem_oracle
+        wl = types.SimpleNamespace(arrivals=arr, tokens=ns,
+                                   predicted=predicted)
+        res = tandem_oracle(self.policy, wl, self.clock.batch, None,
+                            self.memory)
+        waits = res["waits_all"]
+        comp = res["completions"]
+        return ScheduleResult(
+            waits, comp - arr, np.zeros(len(arr), bool),
+            res["batch_sizes"], float(comp.max()) if len(comp) else 0.0,
+            memory=res["memory"])
 
     def run_sessions(self, reqs: List[Request],
                      predicted: Optional[np.ndarray] = None,
@@ -207,6 +246,11 @@ class PolicyScheduler:
         so accounting closes: arrived == served + lost."""
         if all(r.turn <= 1 for r in reqs):
             return self.run(reqs, predicted)
+        if self.memory is not None:
+            raise ValueError(
+                "sessions x memory is not supported: turn re-entry holds "
+                "KV across think times, which the per-batch "
+                "allocate/release ledger does not model")
         from repro.core.sessions import (
             _MAX_PASSES, _TOL, _cascade_cancel, _session_summary,
             check_policy_supports_sessions, plan_from_requests)
@@ -442,8 +486,8 @@ class ContinuousBatchScheduler:
 
 def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
                         predictor=None, predict_seed: int = 0,
-                        predicted: Optional[np.ndarray] = None
-                        ) -> ScheduleResult:
+                        predicted: Optional[np.ndarray] = None,
+                        memory=None) -> ScheduleResult:
     """Form batches with ``policy`` on the request stream's virtual arrival
     timeline, but execute each batch on the REAL engine (prefill + fused
     chunked decode); batch durations are wall-clock seconds.  Works for any
@@ -454,7 +498,24 @@ def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
     with PREDICTED lengths; the engine still decodes each request to its
     true ``target_output_tokens`` — mispredictions show up as real padded
     wall-clock, exactly like in production.  ``predicted`` bypasses the
-    resolution with an explicit column (fleet layer)."""
+    resolution with an explicit column (fleet layer).
+
+    ``memory`` (budget spec, :mod:`repro.core.memory`) gates admission on
+    the REAL KV footprint — prompt length + target output tokens per
+    member.  Engine batches run serially to completion (one device, cache
+    freed between calls), so unlike the pipelined virtual tandem the
+    alive KV between batches is zero and admission reduces to capping
+    each batch's total footprint at the budget: members beyond the
+    longest admissible prefix are deferred via ``formation.rewind`` and
+    re-offered at the next trigger.  The engine's own occupancy
+    (``Engine.kv_report``) cross-checks the ledger from inside the jitted
+    loop."""
+    from repro.core.memory import (
+        check_policy_supports_memory, memory_from_spec, occupancy_stats)
+    budget = memory_from_spec(memory)
+    mem = None if budget.is_null else budget
+    if mem is not None:
+        check_policy_supports_memory(policy)
     clock = EngineClock(engine)
     n = policy.schedule_length(len(reqs))
     arr = np.array([r.arrival for r in reqs[:n]])
@@ -463,7 +524,20 @@ def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
     elastic = isinstance(policy, ElasticPolicy)
     waits = np.zeros(n)
     e2e = np.zeros(n)
+    starts = np.zeros(n)
+    comps = np.zeros(n)
     sizes = []
+    deferred = 0
+    fp = None
+    if mem is not None:
+        # the REAL footprint: actual prompt length (not the budget's
+        # scalar prompt_tokens stand-in) + generated tokens
+        fp = ns + np.array(
+            [len(reqs[i].prompt_tokens) for i in range(n)], np.float64)
+        if n and float(fp.max()) > float(budget.capacity):
+            raise ValueError(
+                f"kv budget {budget.capacity} cannot hold the largest "
+                f"single request (footprint {float(fp.max())})")
     if predicted is None:
         predicted = _request_predictions(policy, predictor, predict_seed,
                                          ns, reqs)
@@ -472,13 +546,33 @@ def run_engine_schedule(policy: BatchPolicy, engine, reqs: List[Request],
     t_free = 0.0
     while (nb := fs.next_batch(t_free)) is not None:
         start, idx = nb
+        if mem is not None:
+            cum, admit = 0.0, 0
+            for i in idx:
+                if cum + fp[i] <= float(budget.capacity):
+                    cum += fp[i]
+                    admit += 1
+                else:
+                    break
+            if admit < len(idx):
+                fs.rewind(len(idx) - admit)
+                deferred += len(idx) - admit
+                idx = idx[:admit]
         comp, total = clock.run_batch([reqs[i] for i in idx], elastic,
                                       policy.n_max)
         waits[idx] = start - arr[idx]
         e2e[idx] = waits[idx] + np.asarray(comp)[:len(idx)]
+        starts[idx] = start
+        comps[idx] = start + np.asarray(comp)[:len(idx)]
         sizes.append(len(idx))
         t_free = start + total
-    return ScheduleResult(waits, e2e, np.zeros(n, bool), sizes, t_free)
+    memrep = None
+    if mem is not None:
+        memrep = occupancy_stats(starts, comps, fp,
+                                 float(budget.capacity), served=n)
+        memrep["deferred_requests"] = deferred
+    return ScheduleResult(waits, e2e, np.zeros(n, bool), sizes, t_free,
+                          memory=memrep)
 
 
 def run_schedule(scheduler, reqs: List[Request]) -> ScheduleResult:

@@ -193,6 +193,34 @@ def test_multibin_analytic_bound_dominates_simulation():
         0.2, UNI, LAT) is None
 
 
+def test_srpt_analytic_bound_dominates_simulation():
+    """The size-interval envelope (bulk.srpt_bound) closes the SRPT
+    analytic debt: ``analytic_kind`` is 'bound', and the bound dominates
+    the simulator across loads without being vacuous."""
+    from repro.core.bulk import srpt_bound
+    pol = SRPTPolicy(b_max=8)
+    assert pol.analytic_kind == "bound"
+    for lam in (0.05, 0.1, 0.2):
+        sim = simulate_policy_fast(pol, lam, UNI, LAT,
+                                   num_requests=120_000, seed=11)
+        d = srpt_bound(UNI, LAT, lam, b_max=8)
+        assert d["stable"]
+        assert np.isfinite(d["wait_bound"])
+        ana = pol.analytic_delay(lam, UNI, LAT)
+        assert ana == pytest.approx(d["wait_bound"])
+        assert d["wait_bound"] >= sim["mean_wait"] * 0.98, (lam, d, sim)
+        assert d["wait_bound"] <= max(sim["mean_wait"] * 4.0, 1.0), (lam, d)
+    # b_max=None serves everyone waiting: the size-interval split
+    # degenerates to the one-class dynamic envelope
+    from repro.core.bulk import dynamic_batching_bound
+    d = srpt_bound(UNI, LAT, 0.1, b_max=None)
+    assert d["wait_bound"] == pytest.approx(
+        dynamic_batching_bound(UNI, LAT, 0.1)["wait_bound"])
+    # a predictor-routed SRPT ranks on noisy lengths: no analytic form
+    assert SRPTPolicy(
+        b_max=8, predictor="lognormal_noise").analytic_kind is None
+
+
 def test_wait_threshold_holds_and_amortizes():
     """WAIT (Dai et al. 2025): holding until k are buffered forms batches
     of >= k (up to end-of-stream stragglers), paying queueing delay at low

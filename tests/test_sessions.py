@@ -491,8 +491,16 @@ def test_feedback_policy_delay_transfer():
     assert out["stable"]
     ref = mg1_wait(LN, SINGLE, 0.1)
     assert abs(out["wait"] - ref.wait) < 1e-9
-    nowin = feedback_policy_delay(SRPTPolicy(b_max=8), 0.05, LN, LAT,
-                                  GeometricSession(p=0.5))
+    # SRPT's size-interval envelope (bulk.srpt_bound) transfers too: at
+    # this lam_eff the serial envelope of the capped batch is unstable,
+    # so the transfer reports wait=inf / stable=False
+    srpt = feedback_policy_delay(SRPTPolicy(b_max=8), 0.05, LN, LAT,
+                                 GeometricSession(p=0.5))
+    assert srpt["wait"] == np.inf and not srpt["stable"]
+    # a noisy predictor voids the envelope -> no closed form at all
+    nowin = feedback_policy_delay(
+        SRPTPolicy(b_max=8, predictor="lognormal_noise"), 0.05, LN, LAT,
+        GeometricSession(p=0.5))
     assert nowin["wait"] is None and not nowin["stable"]
 
 
